@@ -1,0 +1,132 @@
+"""Beyond-paper experiments.
+
+  * gorder_dbg_composition — paper §VII's Gorder+DBG idea, measured: apply
+    DBG AFTER gorder_lite; structure mostly retained, hot vertices contiguous.
+  * dbg_group_sensitivity — the grouping framework's central trade-off
+    (structure preservation vs hot-footprint) swept over the number of
+    geometric groups: K=2 (HubCluster-like) ... K=12 (Sort-like).
+  * dbg_vocab_ablation — train the same tiny LM with and without DBG vocab
+    reordering; verifies the reordering is loss-neutral (pure relabeling)
+    while making the hot-panel coverage available to the serving path.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.cachesim import (amat_cycles, property_trace, scaled_hierarchy,
+                            stack_distances, to_blocks)
+from repro.core import reorder
+from repro.core.gorder_lite import gorder_lite
+from repro.graph import csr as csr_mod
+
+from . import common
+
+
+def gorder_dbg_composition():
+    """Paper §VII: DBG applied on top of Gorder retains most of Gorder's
+    quality while making the layout hot/cold-contiguous (HW-scheme ready)."""
+    t0 = time.perf_counter()
+    out = {}
+    for key in ["lj", "mp", "tw"]:
+        g = common.graph(key)
+        lv = scaled_hierarchy(g.num_vertices)
+
+        def amat_for(mapping):
+            g2 = csr_mod.relabel(g, mapping)
+            return amat_cycles(
+                stack_distances(to_blocks(property_trace(g2, "pull"))), lv)
+
+        base = amat_for(np.arange(g.num_vertices))
+        go = gorder_lite(g).mapping
+        # DBG over the gorder-relabeled graph's degrees, then compose
+        g_go = csr_mod.relabel(g, go)
+        dbg2 = reorder.dbg(g_go.out_degrees()).mapping
+        composed = reorder.compose(go, dbg2)
+        dbg_only = reorder.dbg(g.out_degrees()).mapping
+        out[key] = {
+            "gorder_speedup_pct": round((base / amat_for(go) - 1) * 100, 1),
+            "gorder+dbg_speedup_pct": round(
+                (base / amat_for(composed) - 1) * 100, 1),
+            "dbg_speedup_pct": round((base / amat_for(dbg_only) - 1) * 100, 1),
+        }
+    common.save_json("gorder_dbg_composition.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def dbg_group_sensitivity():
+    """Sweep the number of geometric hot groups: K controls the
+    footprint-vs-structure trade-off (Table V's knob made quantitative)."""
+    t0 = time.perf_counter()
+    out = {}
+    for key in ["mp", "tw"]:
+        g = common.graph(key)
+        lv = scaled_hierarchy(g.num_vertices)
+        degs = g.out_degrees()
+        a = max(1.0, degs.mean())
+        base = amat_cycles(
+            stack_distances(to_blocks(property_trace(g, "pull"))), lv)
+        row = {}
+        for k_hot in [1, 2, 4, 6, 8, 10]:
+            spec = reorder.dbg_spec(a, num_hot_groups=k_hot)
+            res = reorder.group_reorder(degs, spec)
+            g2 = csr_mod.relabel(g, res.mapping)
+            am = amat_cycles(
+                stack_distances(to_blocks(property_trace(g2, "pull"))), lv)
+            row[f"hot_groups_{k_hot}"] = {
+                "groups_total": spec.num_groups,
+                "speedup_pct": round((base / am - 1) * 100, 1),
+            }
+        out[key] = row
+    common.save_json("dbg_group_sensitivity.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def dbg_vocab_ablation():
+    """Same data/model/seeds, with vs without DBG vocab reordering: losses
+    must match closely (relabeling is semantics-preserving) while only the
+    DBG run concentrates hot lookups in the replicated panel."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.core.vocab import reorder_vocab
+    from repro.data.pipeline import DataConfig, ZipfPipeline
+    from repro.lm import model as model_mod
+    from repro.train import step as step_mod
+
+    t0 = time.perf_counter()
+    results = {}
+    for use_dbg in [False, True]:
+        cfg = reduced(get_config("olmo_1b"), remat=False, n_layers=2,
+                      vocab_size=2048, d_model=64, d_ff=128, n_heads=2,
+                      n_kv_heads=2, d_head=32, hot_vocab_rows=256)
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_size=4,
+                        motif_prob=0.4)
+        pipe = ZipfPipeline(dc)
+        vr = None
+        if use_dbg:
+            vr = reorder_vocab(pipe.frequencies(), row_multiple=128)
+            pipe = ZipfPipeline(dc, vocab_map=vr)
+        params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+        opt = step_mod.init_opt(params)
+        oc = step_mod.OptConfig(lr=3e-3, warmup=5, total_steps=25,
+                                compute_dtype="float32")
+        ts = jax.jit(step_mod.make_train_step(cfg, oc), donate_argnums=(0, 1))
+        losses = []
+        for i in range(25):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+            params, opt, m = ts(params, opt, batch)
+            losses.append(float(m["loss"]))
+        key = "dbg_vocab" if use_dbg else "baseline"
+        results[key] = {"first5_loss": round(float(np.mean(losses[:5])), 3),
+                        "last5_loss": round(float(np.mean(losses[-5:])), 3)}
+        if vr is not None:
+            results[key]["hot_coverage_pct"] = round(100 * vr.coverage, 1)
+    common.save_json("dbg_vocab_ablation.json", results)
+    return (time.perf_counter() - t0) * 1e6, results
+
+
+BENCHES = [gorder_dbg_composition, dbg_group_sensitivity, dbg_vocab_ablation]

@@ -1,0 +1,173 @@
+"""LM-side benchmarks: the §Roofline table from the dry-run artifacts, the
+DBG-vocabulary coverage curve (K2), stable-bin MoE dispatch vs sort dispatch
+(K3), and wall-clock microbenches of the graph kernels."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.vocab import reorder_vocab, zipf_frequencies
+from repro.lm import model as model_mod
+from repro.lm import moe as moe_mod
+from repro.roofline.analysis import HW, model_flops
+
+from . import common
+
+DRYRUN_JSON = os.path.join(common.RESULTS_DIR, "dryrun.json")
+
+
+def _arch_params(arch: str):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: model_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    routed = 0
+    if cfg.n_experts:
+        f = cfg.moe_d_ff or cfg.d_ff
+        routed = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * f
+    active = total - int(routed * (1 - cfg.top_k / max(1, cfg.n_experts)))
+    return cfg, total, active
+
+
+def lm_roofline():
+    """§Roofline: per (arch x shape x mesh) three terms + dominant +
+    MODEL_FLOPS/HLO_FLOPs ratio, from the dry-run JSON."""
+    t0 = time.perf_counter()
+    if not os.path.exists(DRYRUN_JSON):
+        return 0.0, {"error": "run repro.launch.dryrun first"}
+    data = json.load(open(DRYRUN_JSON))
+    hw = HW()
+    table = {}
+    for key, cell in sorted(data.items()):
+        if cell.get("status") != "ok":
+            continue
+        arch, shape, mesh = key.split("|")
+        if mesh != "single":
+            continue  # roofline table is single-pod (assignment)
+        cfg, total, active = _arch_params(arch)
+        b = {"train_4k": (256, 4096), "prefill_32k": (32, 32768),
+             "decode_32k": (128, 1), "long_500k": (1, 1)}[shape]
+        tokens = b[0] * b[1]
+        kind = cell["kind"]
+        mf = model_flops(active, tokens, kind)
+        hlo_total = cell["per_device"]["flops"] * cell["n_devices"]
+        r = dict(cell["roofline"])
+        r["model_flops_ratio"] = round(mf / hlo_total, 3) if hlo_total else None
+        r["peak_gib"] = round(cell["per_device"]["peak_bytes"] / 2 ** 30, 2)
+        r["fits_16g"] = bool(cell["per_device"]["peak_bytes"] < 16 * 2 ** 30)
+        for t in ("compute_s", "memory_s", "collective_s", "bound_s"):
+            r[t] = float(f"{r[t]:.3e}")
+        table[f"{arch}|{shape}"] = r
+    common.save_json("lm_roofline_table.json", table)
+    return (time.perf_counter() - t0) * 1e6, {
+        k: {"dominant": v["dominant"], "bound_s": v["bound_s"],
+            "fits_16g": v["fits_16g"]}
+        for k, v in table.items()}
+
+
+def k2_vocab_coverage():
+    """DBG-vocabulary hot coverage: fraction of token lookups served by the
+    replicated hot panel vs panel size (the paper's Table III/IV for vocab)."""
+    t0 = time.perf_counter()
+    out = {}
+    for vocab, tag in [(64000, "yi"), (256206, "seamless")]:
+        freq = zipf_frequencies(vocab, seed=0)
+        row = {}
+        for hot_groups in [1, 2, 3, 4]:
+            vr = reorder_vocab(freq, hot_group_count=hot_groups)
+            row[f"hot_groups_{hot_groups}"] = {
+                "hot_rows": int(vr.hot_rows),
+                "rows_pct": round(100 * vr.hot_rows / vocab, 2),
+                "coverage_pct": round(100 * vr.coverage, 1),
+            }
+        out[tag] = row
+    common.save_json("k2_vocab_coverage.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def k3_moe_dispatch():
+    """Stable-bin (DBG) dispatch vs argsort dispatch: same routing, measured
+    wall time + order preservation."""
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(0)
+    t, k, e = 16384, 2, 8
+    ids = jnp.asarray(rng.integers(0, e, (t, k)).astype(np.int32))
+    cap = int(t * k * 1.25 / e)
+
+    stable = jax.jit(lambda i: moe_mod.stable_bin_dispatch(i, e, cap))
+    stable(ids)[0].block_until_ready()
+    t1 = time.perf_counter()
+    for _ in range(5):
+        rank, keep = stable(ids)
+    rank.block_until_ready()
+    stable_us = (time.perf_counter() - t1) / 5 * 1e6
+
+    def sort_dispatch(i):
+        flat = i.reshape(-1)
+        order = jnp.argsort(flat)  # the "Sort" baseline: destroys order
+        return order
+
+    sortd = jax.jit(sort_dispatch)
+    sortd(ids).block_until_ready()
+    t1 = time.perf_counter()
+    for _ in range(5):
+        o = sortd(ids)
+    o.block_until_ready()
+    sort_us = (time.perf_counter() - t1) / 5 * 1e6
+
+    # order preservation check
+    fe, fr = np.asarray(ids).reshape(-1), np.asarray(rank).reshape(-1)
+    stable_ok = all(np.all(np.diff(fr[fe == x]) > 0) for x in range(e))
+    out = {"stable_bin_us": round(stable_us, 1), "argsort_us": round(sort_us, 1),
+           "stable_preserves_order": bool(stable_ok),
+           "tokens": t, "experts": e, "top_k": k, "capacity": cap}
+    common.save_json("k3_moe_dispatch.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def k1_spmv_occupancy():
+    """Degree-binned SpMV: per-group lane occupancy (padding waste bound) and
+    wall time vs the segment-sum edge map."""
+    from repro.apps import to_arrays
+    from repro.core.reorder import dbg_spec, reorder_graph
+    from repro.kernels.csr_spmv.ops import dbg_spmv, ell_pack_groups
+    from repro.kernels.csr_spmv.ref import csr_spmv_ref
+
+    t0 = time.perf_counter()
+    g = common.graph("wl", "small")
+    g2, _ = reorder_graph(g, "dbg", degree_source="in")
+    spec = dbg_spec(max(1.0, g2.in_degrees().mean()))
+    groups = ell_pack_groups(g2, spec.boundaries, row_tile=64, width_tile=128)
+    # lane occupancy over REAL rows (row-tile padding excluded): the paper's
+    # geometric-bin argument bounds WIDTH padding within a group
+    occ = {
+        f"group_w{gr.idx.shape[1]}": round(
+            float(gr.w[: gr.num_rows].sum()
+                  / max(1, gr.num_rows * gr.idx.shape[1])), 3)
+        for gr in groups
+    }
+    x = jnp.asarray(np.random.default_rng(0).random(g2.num_vertices,
+                                                    np.float32))
+    ga = to_arrays(g2)
+    ref = jax.jit(lambda xx: csr_spmv_ref(xx, ga.in_src, ga.in_dst, ga.in_w,
+                                          g2.num_vertices))
+    ref(x).block_until_ready()
+    t1 = time.perf_counter()
+    for _ in range(5):
+        y = ref(x)
+    y.block_until_ready()
+    ref_us = (time.perf_counter() - t1) / 5 * 1e6
+    out = {"lane_occupancy": occ, "segment_sum_us": round(ref_us, 1),
+           "note": "kernel validated vs oracle in interpret mode; "
+                   "occupancy >= 0.5 within hot groups by geometric binning"}
+    common.save_json("k1_spmv_occupancy.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+BENCHES = [lm_roofline, k2_vocab_coverage, k3_moe_dispatch, k1_spmv_occupancy]

@@ -1,0 +1,229 @@
+"""Benchmarks reproducing the paper's measured figures/tables (cache model +
+measured reordering cost): Fig 3, Fig 6, Fig 7, Fig 8, Tables XI/XII,
+Fig 10, Fig 11.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from . import common
+
+
+def f3_random_reorder():
+    """Fig 3: slowdown of RV / RCB-1/2/4 (Radii-like pull traversal).
+    Expected: structured datasets hurt badly by RV, less by coarser RCB;
+    synthetic kr ~indifferent."""
+    t0 = time.perf_counter()
+    out = {}
+    for key in common.SKEWED:
+        row = {}
+        for tech in ["random_vertex", "rcb1", "rcb2", "rcb4"]:
+            s = common.app_speedup(key, tech, "pull", "out")
+            row[tech] = round((1.0 / s - 1.0) * 100, 1)  # % slowdown
+        out[key] = row
+    common.save_json("f3_random_reorder.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def f6_speedup():
+    """Fig 6: per-app speedup (cache model, excluding reordering time) for all
+    skew-aware techniques, all 8 datasets x 5 apps = 40 datapoints/technique."""
+    t0 = time.perf_counter()
+    table = {}
+    for tech in common.TECHNIQUES[1:] + ["gorder_lite"]:
+        per_app = {}
+        all_pts = []
+        for key in common.SKEWED:
+            for app, mode, degsrc in common.APPS:
+                s = common.app_speedup(key, tech, mode, degsrc)
+                per_app[f"{key}.{app}"] = round((s - 1) * 100, 1)
+                all_pts.append(s)
+        table[tech] = {
+            "mean_speedup_pct": round((common.geomean(all_pts) - 1) * 100, 1),
+            "unstructured_pct": round((common.geomean(
+                [v / 100 + 1 for k, v in per_app.items()
+                 if k.split(".")[0] in common.UNSTRUCTURED]) - 1) * 100, 1),
+            "structured_pct": round((common.geomean(
+                [v / 100 + 1 for k, v in per_app.items()
+                 if k.split(".")[0] in common.STRUCTURED]) - 1) * 100, 1),
+            "per_datapoint": per_app,
+        }
+    common.save_json("f6_speedup.json", table)
+    small = {t: {k: v for k, v in d.items() if k != "per_datapoint"}
+             for t, d in table.items()}
+    return (time.perf_counter() - t0) * 1e6, small
+
+
+def f7_noskew():
+    """Fig 7: skew-aware techniques must be ~neutral on no-skew datasets."""
+    t0 = time.perf_counter()
+    out = {}
+    for key in common.NOSKEW:
+        row = {}
+        for tech in common.TECHNIQUES[1:]:
+            pts = [common.app_speedup(key, tech, m, d)
+                   for _, m, d in common.APPS]
+            row[tech] = round((common.geomean(pts) - 1) * 100, 1)
+        out[key] = row
+    common.save_json("f7_noskew.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def f8_mpki():
+    """Fig 8: L1/L2/L3 MPKA for PR (pull) across datasets x techniques."""
+    t0 = time.perf_counter()
+    out = {}
+    for key in common.SKEWED:
+        row = {}
+        for tech in common.TECHNIQUES:
+            _, m, _, _ = common.sim(key, tech, "pull", "out")
+            row[tech] = {k: round(v, 1) for k, v in m.items()}
+        out[key] = row
+    common.save_json("f8_mpki.json", out)
+    sample = {k: out[k] for k in ["sd", "mp"]}
+    return (time.perf_counter() - t0) * 1e6, sample
+
+
+def t11_reorder_time():
+    """Table XI: reordering time normalized to Sort (lower is better)."""
+    t0 = time.perf_counter()
+    out = {}
+    for key in common.SKEWED:
+        _, _, t_sort, _ = common.sim(key, "sort", "pull", "out")
+        row = {}
+        for tech in ["hubsort", "hubcluster", "dbg", "gorder_lite"]:
+            _, _, secs, _ = common.sim(key, tech, "pull", "out")
+            row[tech] = round(secs / max(t_sort, 1e-9), 2)
+        out[key] = row
+    common.save_json("t11_reorder_time.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def _iters_to_amortize(key, tech, iters_per_run=None):
+    """Minimum PR iterations for the AMAT savings to cover the reorder cost."""
+    a_base, _, _, n = common.sim(key, "original", "pull", "out")
+    a_tech, _, secs, _ = common.sim(key, tech, "pull", "out")
+    cyc_saved = (a_base - a_tech) * n
+    if cyc_saved <= 0:
+        return float("inf")
+    sec_saved_per_iter = cyc_saved / (common.CPU_GHZ * 1e9)
+    return secs / sec_saved_per_iter
+
+
+def t12_amortization():
+    """Table XII: min PR iterations to amortize reordering cost."""
+    t0 = time.perf_counter()
+    out = {}
+    for key in ["tw", "sd", "fr", "mp"]:
+        row = {}
+        for tech in ["sort", "hubsort", "hubcluster", "dbg", "gorder_lite"]:
+            it = _iters_to_amortize(key, tech)
+            row[tech] = round(it, 1) if np.isfinite(it) else "never"
+        out[key] = row
+    common.save_json("t12_amortization.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def f10_net_speedup():
+    """Fig 10: end-to-end speedup INCLUDING reorder cost, one PR-to-
+    convergence run (64 iterations)."""
+    t0 = time.perf_counter()
+    iters = 64
+    out = {}
+    for key in ["tw", "sd", "fr", "mp"]:
+        a_base, _, _, n = common.sim(key, "original", "pull", "out")
+        t_base = iters * n * (common.C_COMPUTE + a_base) / (common.CPU_GHZ * 1e9)
+        row = {}
+        for tech in common.TECHNIQUES[1:] + ["gorder_lite"]:
+            a, _, secs, _ = common.sim(key, tech, "pull", "out")
+            t_tech = secs + iters * n * (common.C_COMPUTE + a) / (common.CPU_GHZ * 1e9)
+            row[tech] = round((t_base / t_tech - 1) * 100, 1)
+        out[key] = row
+    common.save_json("f10_net_speedup.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def f11_sssp_traversals():
+    """Fig 11: SSSP net speedup vs number of traversals (1..32)."""
+    t0 = time.perf_counter()
+    out = {}
+    for n_trav in [1, 8, 16, 32]:
+        row = {}
+        for tech in common.TECHNIQUES[1:]:
+            pts = []
+            for key in ["tw", "sd", "fr", "mp"]:
+                a_base, _, _, n = common.sim(key, "original", "push", "in")
+                a, _, secs, _ = common.sim(key, tech, "push", "in")
+                t_base = n_trav * n * (common.C_COMPUTE + a_base) / (common.CPU_GHZ * 1e9)
+                t_tech = secs + n_trav * n * (common.C_COMPUTE + a) / (common.CPU_GHZ * 1e9)
+                pts.append(t_base / t_tech)
+            row[tech] = round((common.geomean(pts) - 1) * 100, 1)
+        out[f"traversals_{n_trav}"] = row
+    common.save_json("f11_sssp_traversals.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def f5_impl_comparison():
+    """Fig 5-style: HubSort/HubCluster via the DBG framework vs 'original'
+    single-shot implementations — here we verify framework-derived mappings
+    equal the direct implementations (Table V equivalence), and compare time."""
+    import numpy as np
+
+    from repro.core import reorder
+
+    t0 = time.perf_counter()
+    out = {}
+    for key in ["tw", "mp"]:
+        g = common.graph(key)
+        degs = g.out_degrees()
+        a = max(1.0, degs.mean())
+        t1 = time.perf_counter()
+        hc_direct = reorder.hubcluster(degs)
+        t_direct = time.perf_counter() - t1
+        t1 = time.perf_counter()
+        hc_fw = reorder.group_reorder(degs, reorder.hubcluster_spec(a))
+        t_fw = time.perf_counter() - t1
+        assert np.array_equal(hc_direct.mapping, hc_fw.mapping)
+        out[key] = {"direct_s": round(t_direct, 4), "framework_s": round(t_fw, 4)}
+    common.save_json("f5_impl_comparison.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def f9_push_coherence():
+    """Fig 9 analogue (DESIGN.md §2): the paper's multi-socket coherence
+    traffic maps to cross-device scatter traffic at cluster scale.  Partition
+    vertices into 16 contiguous shards (the distributed layout implied by the
+    ordering); a push crosses the 'socket'/device boundary iff src and dst
+    live on different shards.  DBG should REDUCE the remote fraction on
+    structured datasets (community members stay co-located) while random
+    reordering maximizes it."""
+    import numpy as np
+
+    from repro.graph import csr as csr_mod
+
+    t0 = time.perf_counter()
+    n_shards = 16
+    out = {}
+    for key in ["sd", "mp", "fr"]:
+        g = common.graph(key)
+
+        def remote_frac(graph):
+            src, dst, _ = csr_mod.to_edges(graph)
+            shard = lambda v: v * n_shards // graph.num_vertices
+            return float(np.mean(shard(src) != shard(dst)))
+
+        row = {"original": round(100 * remote_frac(g), 1)}
+        for tech in ["dbg", "hubcluster", "sort", "random_vertex"]:
+            g2, _ = common.reorder.reorder_graph(g, tech, degree_source="in")
+            row[tech] = round(100 * remote_frac(g2), 1)
+        out[key] = row
+    common.save_json("f9_push_coherence.json", out)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+# re-bind with f9 now defined (appended after the original list)
+BENCHES = [f3_random_reorder, f5_impl_comparison, f6_speedup, f7_noskew,
+           f8_mpki, f9_push_coherence, t11_reorder_time, t12_amortization,
+           f10_net_speedup, f11_sssp_traversals]

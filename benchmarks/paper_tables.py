@@ -1,0 +1,50 @@
+"""Benchmarks reproducing the paper's static analysis tables (I-IV)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import stats
+
+from . import common
+
+
+def t1_skew():
+    """Table I: hot-vertex % and edge coverage per dataset."""
+    t0 = time.perf_counter()
+    out = {}
+    for key in common.SKEWED:
+        out[key] = {k: round(v, 1) for k, v in
+                    stats.hot_vertex_stats(common.graph(key)).items()}
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def t2_hot_per_block():
+    """Table II: avg hot vertices per cache block (paper: 1.3-3.5)."""
+    t0 = time.perf_counter()
+    out = {k: round(stats.hot_per_cache_block(common.graph(k)), 2)
+           for k in common.SKEWED}
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def t3_footprint():
+    """Table III: MB needed for all hot vertices (8 and 16 B/vertex)."""
+    t0 = time.perf_counter()
+    out = {}
+    for k in common.SKEWED:
+        g = common.graph(k)
+        out[k] = {
+            "8B_mb": round(stats.hot_footprint_mb(g, bytes_per_vertex=8), 3),
+            "16B_mb": round(stats.hot_footprint_mb(g, bytes_per_vertex=16), 3),
+        }
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def t4_degree_dist():
+    """Table IV: hot-vertex distribution across geometric ranges (sd)."""
+    t0 = time.perf_counter()
+    dist = stats.degree_range_distribution(common.graph("sd"))
+    out = {k: {kk: round(vv, 2) for kk, vv in v.items()} for k, v in dist.items()}
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+BENCHES = [t1_skew, t2_hot_per_block, t3_footprint, t4_degree_dist]

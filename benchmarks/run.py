@@ -1,0 +1,29 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import json
+import sys
+
+from . import beyond_paper, lm_benches, paper_figures, paper_tables
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    benches = (paper_tables.BENCHES + paper_figures.BENCHES
+               + lm_benches.BENCHES + beyond_paper.BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in benches:
+        if only and only not in fn.__name__:
+            continue
+        try:
+            us, derived = fn()
+            print(f"{fn.__name__},{us:.0f},"
+                  f"\"{json.dumps(derived, default=str)[:600]}\"", flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{fn.__name__},-1,\"ERROR: {e}\"", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,62 @@
+"""Full graph-analytics run: all five Ligra apps on a reordered dataset,
+including the Pallas degree-binned SpMV (kernel K1) as the PageRank edge-map.
+
+  PYTHONPATH=src python examples/graph_analytics.py [dataset]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import bc, pagerank, pagerank_delta, radii, sssp, to_arrays
+from repro.core.reorder import dbg_spec, reorder_graph
+from repro.graph import datasets
+from repro.kernels.csr_spmv.ops import dbg_spmv, ell_pack_groups
+from repro.kernels.csr_spmv.ref import csr_spmv_ref
+
+
+def main():
+    name = sys.argv[1] if len(sys.argv) > 1 else "lj"
+    g = datasets.load(name, scale="small")
+    gw = datasets.load_weighted(name, scale="small")
+    print(f"dataset {name}: V={g.num_vertices:,} E={g.num_edges:,}")
+
+    g2, res = reorder_graph(g, "dbg", degree_source="out")
+    print(f"DBG reordering: {res.seconds:.3f}s, {res.num_groups} groups")
+    ga = to_arrays(g2)
+    gaw = to_arrays(reorder_graph(gw, "dbg", degree_source="in")[0])
+
+    for label, fn, args in [
+        ("PR", pagerank, (ga,)),
+        ("PRD", pagerank_delta, (ga,)),
+        ("SSSP", sssp, (gaw, jnp.int32(0))),
+        ("BC", bc, (ga, jnp.int32(0))),
+        ("Radii", radii, (ga, jnp.int32(0))),
+    ]:
+        t0 = time.time()
+        out = fn(*args)
+        first = out[0].block_until_ready()
+        iters = int(out[-1])  # PR/PRD/SSSP/Radii: iterations; BC: BFS levels
+        print(f"  {label:6s} iters={iters}  {time.time()-t0:.2f}s  "
+              f"finite={bool(jnp.isfinite(jnp.asarray(first, jnp.float32)).all())}")
+
+    # Pallas kernel as the PageRank edge map (pull-mode SpMV over DBG groups)
+    spec = dbg_spec(max(1.0, g2.in_degrees().mean()))
+    groups = ell_pack_groups(g2, spec.boundaries, row_tile=64, width_tile=128)
+    x = jnp.asarray(np.random.default_rng(0).random(g2.num_vertices, np.float32))
+    y_kernel = dbg_spmv(x, groups, g2.num_vertices, row_tile=64, width_tile=128)
+    y_ref = csr_spmv_ref(x, ga.in_src, ga.in_dst, ga.in_w, g2.num_vertices)
+    err = float(jnp.abs(y_kernel - y_ref).max())
+    print(f"  Pallas degree-binned SpMV vs CSR oracle: max err {err:.2e}")
+    widths = [gr.idx.shape[1] for gr in groups]
+    occ = [gr.w.sum() / gr.idx.size for gr in groups]
+    print(f"  ELL group widths {widths} lane-occupancy "
+          f"{[f'{o:.2f}' for o in occ]} (geometric bins bound padding)")
+
+
+if __name__ == "__main__":
+    main()

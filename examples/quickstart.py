@@ -1,0 +1,54 @@
+"""Quickstart: the paper in 60 seconds.
+
+Generates a structured power-law graph, applies every skew-aware reordering
+technique (all derived from the one DBG grouping framework, Table V), runs
+PageRank on each ordering, verifies the results are invariant under
+relabeling, and reports the cache-model AMAT — reproducing the paper's
+headline: DBG packs hot vertices WITHOUT destroying structure.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import pagerank, to_arrays
+from repro.cachesim import (amat_cycles, mpka, property_trace, scaled_hierarchy,
+                            stack_distances, to_blocks)
+from repro.core import reorder
+from repro.graph import datasets
+
+
+def main():
+    g = datasets.load("mp", scale="small")  # structured, like MPI-Twitter
+    print(f"graph: {g.name}  V={g.num_vertices:,} E={g.num_edges:,} "
+          f"avg_deg={g.avg_degree:.1f}")
+
+    ga = to_arrays(g)
+    base_rank, iters = pagerank(ga)
+    print(f"PageRank converged in {int(iters)} iterations\n")
+
+    levels = scaled_hierarchy(g.num_vertices)
+    print(f"{'technique':14s} {'reorder_s':>9s} {'L1 MPKA':>8s} {'L3 MPKA':>8s} "
+          f"{'AMAT cyc':>8s}  {'PR invariant?':>13s}")
+    for tech in ["original", "sort", "hubsort", "hubcluster", "dbg",
+                 "random_vertex"]:
+        g2, res = reorder.reorder_graph(g, tech, degree_source="out")
+        ga2 = to_arrays(g2)
+        rank2, _ = pagerank(ga2)
+        # invariance: rank of original vertex v == rank2 at its new id
+        inv = bool(jnp.allclose(rank2[res.mapping], base_rank, atol=1e-5))
+        d = stack_distances(to_blocks(property_trace(g2, "pull")))
+        m = mpka(d, levels)
+        print(f"{tech:14s} {res.seconds:9.4f} {m['l1_mpka']:8.1f} "
+              f"{m['l3_mpka']:8.1f} {amat_cycles(d, levels):8.1f} {str(inv):>13s}")
+
+    print("\nExpected on a structured graph: DBG lowest AMAT; Sort reduces L3 "
+          "misses but inflates L1 (paper Fig 8); random destroys everything.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + cached greedy decode on a reduced
+deepseek-family model (MLA latent cache + MoE stable-bin dispatch — both
+paper integrations on the serving path).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    raise SystemExit(main(["--arch", "deepseek_v2_lite_16b", "--batch", "2",
+                           "--prompt-len", "16", "--max-new", "16"]))

@@ -1,0 +1,22 @@
+"""End-to-end LM training driver example (wraps repro.launch.train).
+
+Trains a ~100M-param olmo-family model on the Zipf pipeline with DBG
+vocabulary reordering, checkpointing + auto-resume enabled.
+
+  PYTHONPATH=src python examples/train_lm.py            # quick (tiny preset)
+  PYTHONPATH=src python examples/train_lm.py --full     # ~100M, 300 steps
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--full" in sys.argv:
+        argv = ["--arch", "olmo_1b", "--preset", "m100", "--steps", "300",
+                "--batch", "4", "--seq", "512", "--ckpt-dir", "/tmp/repro_m100"]
+    else:
+        argv = ["--arch", "olmo_1b", "--preset", "tiny", "--steps", "60",
+                "--batch", "8", "--seq", "128", "--ckpt-dir", "/tmp/repro_tiny"]
+    raise SystemExit(main(argv))

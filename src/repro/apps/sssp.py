@@ -1,0 +1,42 @@
+"""Single-Source Shortest Path (SSSP) — push-only Bellman-Ford (Table VIII)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .engine import GraphArrays, edge_map_push
+
+__all__ = ["sssp"]
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def sssp(ga: GraphArrays, root: jnp.ndarray, *, max_iters: int = 0):
+    """Returns (dist, iterations). Unreachable vertices keep +inf.
+
+    Relaxations only from the changed frontier (Ligra semantics): each round,
+    active sources push dist[src] + w to out-neighbors with a min-scatter.
+    """
+    v = ga.in_deg.shape[0]
+    max_iters = max_iters or v  # Bellman-Ford bound
+
+    dist0 = jnp.full((v,), jnp.inf, jnp.float32).at[root].set(0.0)
+    frontier0 = jnp.zeros((v,), bool).at[root].set(True)
+
+    def cond(state):
+        _, frontier, it = state
+        return jnp.logical_and(it < max_iters, jnp.any(frontier))
+
+    def body(state):
+        dist, frontier, it = state
+        # inactive sources push +inf (neutral for min)
+        cand = edge_map_push(
+            ga, dist, reduce="min", src_frontier=frontier,
+            use_weights=True, neutral=jnp.inf, init=dist,
+        )
+        frontier = cand < dist
+        return cand, frontier, it + 1
+
+    dist, _, iters = jax.lax.while_loop(cond, body, (dist0, frontier0, 0))
+    return dist, iters

@@ -1,0 +1,11 @@
+from . import simulator, trace  # noqa: F401
+from .simulator import (  # noqa: F401
+    CacheLevels,
+    amat_cycles,
+    miss_curve,
+    mpka,
+    scaled_hierarchy,
+    stack_distances,
+    stack_distances_np,
+)
+from .trace import property_trace, to_blocks  # noqa: F401

@@ -1,0 +1,19 @@
+# The paper's primary contribution: the degree-based grouping (DBG) framework
+# and its integrations (graph reordering, vocabulary layout, MoE dispatch).
+from . import gorder_lite, reorder, stats, vocab  # noqa: F401
+from .reorder import (  # noqa: F401
+    GroupingSpec,
+    ReorderResult,
+    TECHNIQUES,
+    dbg,
+    dbg_spec,
+    group_reorder,
+    hubcluster,
+    hubsort,
+    identity,
+    random_cache_block,
+    random_vertex,
+    reorder_graph,
+    sort_by_degree,
+)
+from .vocab import VocabReordering, reorder_vocab, zipf_frequencies  # noqa: F401

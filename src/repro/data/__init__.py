@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, ZipfPipeline  # noqa: F401

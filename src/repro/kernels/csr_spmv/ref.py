@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the degree-binned SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ell_spmv_ref", "csr_spmv_ref"]
+
+
+def ell_spmv_ref(x: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Row sums of gathered x over an ELL pack: y[r] = sum_j x[idx[r,j]] * w[r,j].
+
+    Padding slots carry w == 0 (and any in-range idx), so they contribute 0.
+    """
+    return jnp.sum(x[idx] * w, axis=1)
+
+
+def csr_spmv_ref(
+    x: jnp.ndarray, indices: jnp.ndarray, dst: jnp.ndarray, w: jnp.ndarray, num_rows: int
+) -> jnp.ndarray:
+    """Edge-parallel CSR oracle: y[dst] += x[src] * w (pull-mode edge map)."""
+    return jax.ops.segment_sum(
+        x[indices] * w, dst, num_segments=num_rows, indices_are_sorted=True
+    )

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the hot/cold split embedding gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gather_ref", "split_gather_ref"]
+
+
+def gather_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return table[ids]
+
+
+def split_gather_ref(
+    hot: jnp.ndarray, cold: jnp.ndarray, ids: jnp.ndarray
+) -> jnp.ndarray:
+    """Equivalent of gathering from concat([hot, cold]) without materializing it."""
+    h = hot.shape[0]
+    is_hot = ids < h
+    hot_part = hot[jnp.where(is_hot, ids, 0)]
+    cold_part = cold[jnp.where(is_hot, 0, ids - h)]
+    return jnp.where(is_hot[:, None], hot_part, cold_part)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the DBG binning kernel (Listing 1 steps 1-2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["assign_bins_ref", "histogram_ref"]
+
+
+def assign_bins_ref(degrees: jnp.ndarray, boundaries: jnp.ndarray) -> jnp.ndarray:
+    """Group index (0 = hottest) for every vertex.
+
+    ``boundaries`` is descending with last element 0; group k holds degrees in
+    ``[boundaries[k], boundaries[k-1])`` (boundaries[-1] treated as +inf).
+    """
+    # degree >= boundaries[k] for k' <= k ... group = first k with deg >= b[k]
+    ge = degrees[:, None] >= boundaries[None, :]  # (V, K) monotone in k
+    return jnp.argmax(ge, axis=1).astype(jnp.int32)
+
+
+def histogram_ref(degrees: jnp.ndarray, boundaries: jnp.ndarray) -> jnp.ndarray:
+    groups = assign_bins_ref(degrees, boundaries)
+    k = boundaries.shape[0]
+    return jnp.zeros((k,), jnp.int32).at[groups].add(1)

@@ -1,0 +1,3 @@
+# NOTE: dryrun is intentionally NOT imported here — importing it sets
+# XLA_FLAGS for 512 host devices, which must only happen in its own process.
+from . import ckpt, mesh  # noqa: F401

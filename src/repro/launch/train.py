@@ -1,0 +1,133 @@
+"""End-to-end training driver (deliverable b): fault-tolerant, resumable.
+
+Runs on whatever devices exist (1 CPU locally; the production mesh on TPU).
+Features exercised here and unit-tested in tests/test_launch.py:
+
+  * auto-resume from the newest valid checkpoint (crash / preemption safe),
+  * SIGTERM/SIGINT handler → synchronous final checkpoint before exit,
+  * straggler guard: per-step deadline logging (on real pods this feeds the
+    coordinator's slow-host eviction; here it logs),
+  * deterministic data cursor (restart replays exactly),
+  * DBG vocabulary reordering applied to the stream (paper integration K2).
+
+Example (CPU, ~100M-param model, a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --preset m100 \
+      --steps 300 --ckpt-dir /tmp/repro_ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..configs.base import reduced
+from ..core.vocab import reorder_vocab
+from ..data.pipeline import DataConfig, ZipfPipeline
+from ..lm import model as model_mod
+from ..train import step as step_mod
+from . import ckpt as ckpt_mod
+
+PRESETS = {
+    # ~100M params: a real (if small) model; CPU-trainable for a few hundred steps
+    "m100": dict(n_layers=8, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+                 vocab_size=32768, hot_vocab_rows=2048),
+    # tiny smoke preset
+    "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+                 vocab_size=2048, hot_vocab_rows=256),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--step-deadline-s", type=float, default=120.0)
+    ap.add_argument("--no-dbg-vocab", action="store_true",
+                    help="ablation: disable the DBG vocabulary reordering")
+    args = ap.parse_args(argv)
+
+    cfg = reduced(get_config(args.arch), **PRESETS[args.preset], remat=False)
+    print(f"[train] arch={cfg.arch_id} preset={args.preset} "
+          f"d={cfg.d_model} L={cfg.n_layers} V={cfg.vocab_size}")
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    batch_size=args.batch)
+    pipe = ZipfPipeline(dc)
+    if not args.no_dbg_vocab:
+        vr = reorder_vocab(pipe.frequencies(), row_multiple=128)
+        hot = min(cfg.hot_vocab_rows, vr.hot_rows)
+        cfg = dataclasses.replace(cfg, hot_vocab_rows=max(128, hot))
+        pipe = ZipfPipeline(dc, vocab_map=vr)
+        print(f"[train] DBG vocab: hot_rows={cfg.hot_vocab_rows} "
+              f"coverage={vr.coverage:.3f}")
+
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key)
+    opt = step_mod.init_opt(params)
+    oc = step_mod.OptConfig(lr=args.lr, warmup=20, total_steps=args.steps,
+                            compute_dtype="float32")
+    train_step = jax.jit(step_mod.make_train_step(cfg, oc),
+                         donate_argnums=(0, 1))
+
+    start_step = 0
+    restored = ckpt_mod.restore_latest(args.ckpt_dir, params, opt)
+    if restored:
+        params, opt = restored["params"], restored["opt"]
+        start_step = restored["step"]
+        key = jnp.asarray(restored["rng_key"])
+        print(f"[train] resumed from step {start_step}")
+
+    stop = {"now": False}
+
+    def handle(sig, frame):  # preemption-safe shutdown
+        print(f"[train] signal {sig}: checkpoint + exit")
+        stop["now"] = True
+
+    signal.signal(signal.SIGTERM, handle)
+    signal.signal(signal.SIGINT, handle)
+
+    t_start = time.time()
+    losses = []
+    step_i = start_step
+    for step_i in range(start_step, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(step_i).items()}
+        params, opt, metrics = train_step(params, opt, batch)
+        dt = time.time() - t0
+        if dt > args.step_deadline_s:
+            print(f"[train][straggler] step {step_i} took {dt:.1f}s "
+                  f"(deadline {args.step_deadline_s}s)")
+        losses.append(float(metrics["loss"]))
+        if step_i % 10 == 0 or step_i == args.steps - 1:
+            print(f"[train] step {step_i} loss {losses[-1]:.4f} "
+                  f"({dt:.2f}s/step)", flush=True)
+        if (step_i + 1) % args.ckpt_every == 0 or stop["now"]:
+            path = ckpt_mod.save_checkpoint(
+                args.ckpt_dir, step_i + 1, params, opt,
+                data_cursor=step_i + 1, rng_key=key)
+            print(f"[train] checkpoint -> {path}")
+        if stop["now"]:
+            return 0
+
+    first = np.mean(losses[: max(1, len(losses) // 5)])
+    last = np.mean(losses[-max(1, len(losses) // 5):])
+    print(f"[train] done in {time.time()-t_start:.0f}s; "
+          f"loss {first:.4f} -> {last:.4f} "
+          f"({'DECREASED' if last < first else 'NOT decreased'})")
+    return 0 if last < first else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

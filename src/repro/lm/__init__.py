@@ -1,0 +1,1 @@
+from . import embed, layers, model, moe, ssm  # noqa: F401

@@ -1,0 +1,80 @@
+"""DBG-partitioned vocabulary embedding (integration K2).
+
+After DBG frequency reordering (repro.core.vocab), the first ``hot_rows`` of
+the table are the replicated HOT panel (served locally on every model shard —
+the paper's "hot set fits the fast level"); the cold tail is row-sharded on
+the model axis.  Lookups of hot ids are collective-free; only the Zipf tail
+pays cross-shard traffic.  The unembedding (logits) projection is column-
+sharded on the model axis as usual.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedDims:
+    vocab: int
+    d_model: int
+    hot_rows: int = 0  # 0 → no split (single sharded table)
+    pad_multiple: int = 2048  # Megatron-style vocab padding: 16 shards x 128
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.pad_multiple
+        return -(-self.vocab // m) * m
+
+    @property
+    def cold_rows(self) -> int:
+        return self.padded_vocab - min(self.hot_rows, self.padded_vocab)
+
+
+def embed_init(key, dims: EmbedDims, dtype=jnp.float32):
+    """Tables sized to ``padded_vocab`` so the vocab axis shards on any mesh;
+    pad ids are never produced by the pipeline (labels < true vocab), pad
+    logits only join the softmax denominator (standard Megatron practice)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(dims.d_model)
+    v = dims.padded_vocab
+    p: Params = {}
+    meta: Dict[str, Any] = {}
+    if dims.hot_rows > 0:
+        hot = min(dims.hot_rows, v)
+        p["hot"] = jax.random.normal(k1, (hot, dims.d_model), dtype) * scale
+        meta["hot"] = (None, "embed_fsdp")  # replicated over model; fsdp over data
+        cold = v - hot
+        if cold > 0:
+            p["cold"] = jax.random.normal(k2, (cold, dims.d_model), dtype) * scale
+            meta["cold"] = ("vocab", None)  # row-sharded on model
+    else:
+        p["table"] = jax.random.normal(k1, (v, dims.d_model), dtype) * scale
+        meta["table"] = ("vocab", None)
+    p["unembed"] = jax.random.normal(k3, (dims.d_model, v), dtype) * scale
+    meta["unembed"] = (None, "vocab")
+    return p, meta
+
+
+def embed_lookup(params: Params, ids: jnp.ndarray, dims: EmbedDims) -> jnp.ndarray:
+    """ids: (B, S) int32 -> (B, S, D).  Hot ids hit the replicated panel."""
+    if "table" in params:
+        return params["table"][ids]
+    hot = params["hot"]
+    h = hot.shape[0]
+    is_hot = ids < h
+    hot_part = hot[jnp.where(is_hot, ids, 0)]
+    if "cold" in params:
+        cold_part = params["cold"][jnp.where(is_hot, 0, ids - h)]
+        return jnp.where(is_hot[..., None], hot_part, cold_part)
+    return hot_part
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, D) -> (B, S, V) logits (V sharded on model axis)."""
+    return x @ params["unembed"]

@@ -1,0 +1,449 @@
+"""Transformer building blocks: norms, RoPE, attention (GQA/MQA, local,
+flash-style blockwise, decode), MLA, gated MLPs.  Pure-functional JAX —
+params are nested dicts of arrays; every init fn returns (params, meta) where
+meta maps each leaf to LOGICAL AXIS names consumed by repro.dist.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.constrain import axis_size, constrain
+
+Params = Dict[str, Any]
+
+
+def _constrain_qkv(q, k, v, n_heads: int):
+    """Head-sharded when the model axis divides n_heads; otherwise fall back
+    to SEQUENCE sharding for q (kv replicated) — padding an indivisible head
+    axis degenerates into per-block collectives inside the attention scan
+    (§Perf iteration A1)."""
+    hs = axis_size("model")
+    if hs and n_heads % hs == 0:
+        q = constrain(q, "batch", None, "model", None)
+        k = constrain(k, "batch", None, "model", None)  # auto-drops if kv%hs
+        v = constrain(v, "batch", None, "model", None)
+    else:
+        q = constrain(q, "batch", "seq", None, None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    return q, k, v
+
+# ---------------------------------------------------------------------------
+# init helpers — every weight leaf gets logical axes for sharding
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, axes: Tuple[str, str], dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return {"w": w}, {"w": axes}
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def nonparametric_ln(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm: standardize, no scale/bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int):
+    if kind == "rmsnorm":
+        return rmsnorm_init(d)
+    if kind == "nonparametric":
+        return {}, {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params, x):
+    if kind == "rmsnorm":
+        return rmsnorm(params, x)
+    if kind == "nonparametric":
+        return nonparametric_ln(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., S, H, D) rotated pairwise; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention — GQA/MQA with blockwise (flash-style) causal softmax
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv: int
+    d_head: int
+
+
+def attn_init(key, d_model: int, dims: AttnDims, out_mult: int = 1):
+    ks = jax.random.split(key, 4)
+    p, m = {}, {}
+    p["q"], mq = dense_init(ks[0], d_model, dims.n_heads * dims.d_head, ("embed", "heads"))
+    p["k"], _ = dense_init(ks[1], d_model, dims.n_kv * dims.d_head, ("embed", "kv_heads"))
+    p["v"], _ = dense_init(ks[2], d_model, dims.n_kv * dims.d_head, ("embed", "kv_heads"))
+    p["o"], _ = dense_init(ks[3], dims.n_heads * dims.d_head, d_model * out_mult,
+                           ("heads", "embed"))
+    m = {"q": {"w": ("embed", "heads")}, "k": {"w": ("embed", "kv_heads")},
+         "v": {"w": ("embed", "kv_heads")}, "o": {"w": ("heads", "embed")}}
+    return p, m
+
+
+def _blockwise_causal_attn(q, k, v, *, block_q: int, block_k: int,
+                           window: Optional[int] = None):
+    """Flash-style blockwise causal attention (pure JAX, O(S*block) memory).
+
+    q: (B, S, H, D); k/v: (B, S, Hkv, D).  GQA: H = G * Hkv.
+    ``window``: optional sliding-window (local) width — key blocks entirely
+    outside every query's window are skipped by masking (the scan itself stays
+    static-shape; XLA DCEs fully-masked blocks after fusion).
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    nq = s // block_q
+    nk = s // block_k
+    q = jnp.moveaxis(q.reshape(b, nq, block_q, h, d), 1, 0)  # (nq, B, bq, H, D)
+
+    def q_block(carry_qi, qb):
+        qi, = carry_qi
+        # online softmax over key blocks
+        def kv_block(carry, ki):
+            m_prev, l_prev, acc = carry
+            ks_ = jax.lax.dynamic_slice_in_dim(k, ki * block_k, block_k, axis=1)
+            vs_ = jax.lax.dynamic_slice_in_dim(v, ki * block_k, block_k, axis=1)
+            # scores: (B, block_q, H, block_k)
+            qr = qb.reshape(b, block_q, hkv, g, d)
+            kr = ks_.reshape(b, block_k, hkv, d)
+            sc = jnp.einsum("bqhgd,bkhd->bqhgk", qr, kr) * scale
+            sc = sc.reshape(b, block_q, h, block_k)
+            qpos = qi * block_q + jnp.arange(block_q)
+            kpos = ki * block_k + jnp.arange(block_k)
+            mask = qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask = jnp.logical_and(mask, qpos[:, None] - kpos[None, :] < window)
+            sc = jnp.where(mask[None, :, None, :], sc, -jnp.inf)
+            m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            p = jnp.where(jnp.isfinite(m_new)[..., None], p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            pr = p.reshape(b, block_q, hkv, g, block_k)
+            vr = vs_.reshape(b, block_k, hkv, dv)
+            delta = jnp.einsum("bqhgk,bkhd->bqhgd", pr, vr).reshape(b, block_q, h, dv)
+            acc = acc * alpha[..., None] + delta
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, block_q, h), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, block_q, h), jnp.float32)
+        a0 = jnp.zeros((b, block_q, h, dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return (qi + 1,), out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, (jnp.int32(0),), q)
+    # outs: (nq, B, block_q, H, Dv) -> (B, S, H, Dv)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+
+
+def mha(
+    params: Params,
+    x: jnp.ndarray,
+    dims: AttnDims,
+    *,
+    positions: jnp.ndarray,
+    rope_theta: float = 10000.0,
+    window: Optional[int] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+):
+    """Full-sequence causal (optionally sliding-window) GQA attention."""
+    b, s, _ = x.shape
+    q = (x @ params["q"]["w"]).reshape(b, s, dims.n_heads, dims.d_head)
+    k = (x @ params["k"]["w"]).reshape(b, s, dims.n_kv, dims.d_head)
+    v = (x @ params["v"]["w"]).reshape(b, s, dims.n_kv, dims.d_head)
+    q, k, v = _constrain_qkv(q, k, v, dims.n_heads)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    out = _blockwise_causal_attn(q, k, v, block_q=bq, block_k=bk, window=window)
+    return out.reshape(b, s, -1) @ params["o"]["w"]
+
+
+def mha_bidir(
+    params: Params,
+    x: jnp.ndarray,
+    dims: AttnDims,
+    *,
+    positions: jnp.ndarray,
+    rope_theta: float = 10000.0,
+    block: int = 512,
+):
+    """Bidirectional (encoder) attention, blockwise over keys (no S^2)."""
+    b, s, _ = x.shape
+    q = (x @ params["q"]["w"]).reshape(b, s, dims.n_heads, dims.d_head)
+    k = (x @ params["k"]["w"]).reshape(b, s, dims.n_kv, dims.d_head)
+    v = (x @ params["v"]["w"]).reshape(b, s, dims.n_kv, dims.d_head)
+    q, k, v = _constrain_qkv(q, k, v, dims.n_heads)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    bq = min(block, s)
+    out = _blockwise_attn_nomask(q, k, v, block_q=bq, block_k=bq)
+    return out.reshape(b, s, -1) @ params["o"]["w"]
+
+
+def _blockwise_attn_nomask(q, k, v, *, block_q: int, block_k: int):
+    """Unmasked blockwise softmax attention (encoder)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    nq = s // block_q
+    nk = s // block_k
+    qs = jnp.moveaxis(q.reshape(b, nq, block_q, h, d), 1, 0)  # (nq, B, bq, H, D)
+
+    def q_block(_, qb):
+        def kv_block(carry, ki):
+            m_prev, l_prev, acc = carry
+            ks_ = jax.lax.dynamic_slice_in_dim(k, ki * block_k, block_k, axis=1)
+            vs_ = jax.lax.dynamic_slice_in_dim(v, ki * block_k, block_k, axis=1)
+            qr = qb.reshape(b, block_q, hkv, g, d)
+            kr = ks_.reshape(b, block_k, hkv, d)
+            sc = jnp.einsum("bqhgd,bkhd->bqhgk", qr, kr) * scale
+            sc = sc.reshape(b, block_q, h, block_k)
+            m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            pr = p.reshape(b, block_q, hkv, g, block_k)
+            vr = vs_.reshape(b, block_k, hkv, dv)
+            delta = jnp.einsum("bqhgk,bkhd->bqhgd", pr, vr).reshape(
+                b, block_q, h, dv)
+            acc = acc * alpha[..., None] + delta
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, block_q, h), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, block_q, h), jnp.float32)
+        a0 = jnp.zeros((b, block_q, h, dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), jnp.arange(nk))
+        return None, (acc / jnp.maximum(l_f, 1e-30)[..., None]).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, qs)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+
+
+def mha_decode(
+    params: Params,
+    x: jnp.ndarray,  # (B, 1, D)
+    dims: AttnDims,
+    cache_k: jnp.ndarray,  # (B, S_max, Hkv, D)
+    cache_v: jnp.ndarray,
+    cur_len: jnp.ndarray,  # scalar int32: tokens already in cache
+    *,
+    rope_theta: float = 10000.0,
+    window: Optional[int] = None,
+):
+    """One-token decode against a KV cache. Returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    q = (x @ params["q"]["w"]).reshape(b, 1, dims.n_heads, dims.d_head)
+    k = (x @ params["k"]["w"]).reshape(b, 1, dims.n_kv, dims.d_head)
+    v = (x @ params["v"]["w"]).reshape(b, 1, dims.n_kv, dims.d_head)
+    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    q = rope(q, pos, rope_theta)
+    k = rope(k, pos, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                                  cur_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                                  cur_len, axis=1)
+    s_max = cache_k.shape[1]
+    g = dims.n_heads // dims.n_kv
+    qr = q.reshape(b, dims.n_kv, g, dims.d_head)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qr, cache_k.astype(jnp.float32))
+    sc = sc / math.sqrt(dims.d_head)
+    kpos = jnp.arange(s_max)
+    valid = kpos <= cur_len
+    if window is not None:
+        valid = jnp.logical_and(valid, kpos > cur_len - window)
+    sc = jnp.where(valid[None, None, None, :], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, dims.n_heads * dims.d_head).astype(x.dtype)
+    return out @ params["o"]["w"], cache_k, cache_v
+
+
+def cross_attn(params: Params, x: jnp.ndarray, memory: jnp.ndarray, dims: AttnDims):
+    """Encoder-decoder cross attention (full softmax over memory)."""
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    q = (x @ params["q"]["w"]).reshape(b, s, dims.n_heads, dims.d_head)
+    k = (memory @ params["k"]["w"]).reshape(b, sm, dims.n_kv, dims.d_head)
+    v = (memory @ params["v"]["w"]).reshape(b, sm, dims.n_kv, dims.d_head)
+    g = dims.n_heads // dims.n_kv
+    qr = q.reshape(b, s, dims.n_kv, g, dims.d_head)
+    sc = jnp.einsum("bqhgd,bkhd->bqhgk", qr, k) / math.sqrt(dims.d_head)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v).reshape(b, s, -1)
+    return out.astype(x.dtype) @ params["o"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaDims:
+    n_heads: int
+    kv_lora: int  # latent width (512 for v2-lite)
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+
+
+def mla_init(key, d_model: int, dims: MlaDims):
+    ks = jax.random.split(key, 6)
+    h = dims.n_heads
+    p = {}
+    p["q"], _ = dense_init(ks[0], d_model, h * (dims.d_nope + dims.d_rope),
+                           ("embed", "heads"))
+    p["kv_down"], _ = dense_init(ks[1], d_model, dims.kv_lora, ("embed", None))
+    p["k_rope"], _ = dense_init(ks[2], d_model, dims.d_rope, ("embed", None))
+    p["k_up"], _ = dense_init(ks[3], dims.kv_lora, h * dims.d_nope, (None, "heads"))
+    p["v_up"], _ = dense_init(ks[4], dims.kv_lora, h * dims.d_v, (None, "heads"))
+    p["o"], _ = dense_init(ks[5], h * dims.d_v, d_model, ("heads", "embed"))
+    m = {k: {"w": ("embed", "heads")} for k in p}
+    m["kv_down"] = {"w": ("embed", None)}
+    m["k_rope"] = {"w": ("embed", None)}
+    m["k_up"] = {"w": (None, "heads")}
+    m["v_up"] = {"w": (None, "heads")}
+    m["o"] = {"w": ("heads", "embed")}
+    return p, m
+
+
+def mla(params, x, dims: MlaDims, *, positions, rope_theta: float = 10000.0,
+        block_q: int = 512, block_k: int = 512):
+    """Full-sequence causal MLA (blockwise — no S^2 materialization).
+
+    The decode-time cache is the latent (B, S, kv_lora + d_rope) — DeepSeek-V2's
+    compression; at prefill we decompress per key block inside the blockwise
+    attention (k = [k_nope | shared k_rope], v from the latent up-projection).
+    """
+    b, s, _ = x.shape
+    h = dims.n_heads
+    q = (x @ params["q"]["w"]).reshape(b, s, h, dims.d_nope + dims.d_rope)
+    q_nope, q_rope = q[..., : dims.d_nope], q[..., dims.d_nope:]
+    q_rope = rope(q_rope, positions, rope_theta)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    latent = x @ params["kv_down"]["w"]  # (B, S, kv_lora)
+    k_rope = rope((x @ params["k_rope"]["w"])[:, :, None, :], positions, rope_theta)
+    k_nope = (latent @ params["k_up"]["w"]).reshape(b, s, h, dims.d_nope)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dims.d_rope))], axis=-1
+    )
+    v = (latent @ params["v_up"]["w"]).reshape(b, s, h, dims.d_v)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    out = _blockwise_causal_attn(q_full, k_full, v, block_q=bq, block_k=bk)
+    return out.reshape(b, s, -1) @ params["o"]["w"]
+
+
+def mla_decode(params, x, dims: MlaDims, cache_latent, cache_krope, cur_len,
+               *, rope_theta: float = 10000.0):
+    """Decode with the latent cache: (B, S_max, kv_lora) + (B, S_max, d_rope)."""
+    b = x.shape[0]
+    h = dims.n_heads
+    q = (x @ params["q"]["w"]).reshape(b, 1, h, dims.d_nope + dims.d_rope)
+    q_nope, q_rope = q[..., : dims.d_nope], q[..., dims.d_nope:]
+    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    q_rope = rope(q_rope, pos, rope_theta)
+    latent_t = x @ params["kv_down"]["w"]  # (B, 1, kv_lora)
+    krope_t = rope((x @ params["k_rope"]["w"])[:, :, None, :], pos, rope_theta)[:, :, 0]
+    cache_latent = jax.lax.dynamic_update_slice_in_dim(
+        cache_latent, latent_t.astype(cache_latent.dtype), cur_len, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, krope_t.astype(cache_krope.dtype), cur_len, axis=1)
+    k_nope = (cache_latent @ params["k_up"]["w"]).reshape(b, -1, h, dims.d_nope)
+    v = (cache_latent @ params["v_up"]["w"]).reshape(b, -1, h, dims.d_v)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope.astype(jnp.float32))
+    sc += jnp.einsum("bqhd,bkd->bhqk", q_rope, cache_krope.astype(jnp.float32))
+    sc = sc / math.sqrt(dims.d_nope + dims.d_rope)
+    valid = jnp.arange(cache_latent.shape[1]) <= cur_len
+    sc = jnp.where(valid[None, None, None, :], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    out = out.reshape(b, 1, -1).astype(x.dtype)
+    return out @ params["o"]["w"], cache_latent, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {}
+    p["up"], _ = dense_init(ks[0], d_model, d_ff, ("embed", "ff"))
+    if gated:
+        p["gate"], _ = dense_init(ks[1], d_model, d_ff, ("embed", "ff"))
+    p["down"], _ = dense_init(ks[2], d_ff, d_model, ("ff", "embed"))
+    m = {"up": {"w": ("embed", "ff")}, "down": {"w": ("ff", "embed")}}
+    if gated:
+        m["gate"] = {"w": ("embed", "ff")}
+    return p, m
+
+
+def mlp(params, x, act: str = "silu"):
+    up = x @ params["up"]["w"]
+    if "gate" in params:
+        g = x @ params["gate"]["w"]
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        h = g * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["down"]["w"]

@@ -1,0 +1,494 @@
+"""Composable model builder: one code path for all 10 assigned architectures.
+
+A model is a stack of PATTERN periods (cfg.layer_pattern()); each period is a
+static tuple of (mixer, channel) layers.  Periods share a param structure, so
+their params are STACKED along a leading axis and the forward pass is a
+``lax.scan`` over periods (small HLO, fast compile, remat per period).  Tail
+layers (n_layers % period) are unrolled.  Enc-dec adds an encoder stack +
+cross-attention; VLM/audio frontends are stub embeddings per the brief.
+
+Decode carries an explicit cache pytree (KV / ring-KV / MLA-latent / SSD /
+RG-LRU state) with the same period stacking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..dist.constrain import constrain
+from . import embed as embed_mod
+from . import layers as L
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# dims helpers
+# ---------------------------------------------------------------------------
+
+def _attn_dims(cfg: ArchConfig) -> L.AttnDims:
+    return L.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+def _mla_dims(cfg: ArchConfig) -> L.MlaDims:
+    return L.MlaDims(cfg.n_heads, cfg.kv_lora, cfg.mla_d_nope, cfg.mla_d_rope,
+                     cfg.mla_d_v)
+
+
+def _ssd_dims(cfg: ArchConfig) -> ssm_mod.SsdDims:
+    return ssm_mod.SsdDims(cfg.d_model, cfg.ssm_state, cfg.ssm_d_head,
+                           cfg.ssm_expand, cfg.ssm_chunk)
+
+
+def _rglru_dims(cfg: ArchConfig) -> ssm_mod.RglruDims:
+    return ssm_mod.RglruDims(cfg.d_model)
+
+
+def _moe_dims(cfg: ArchConfig) -> moe_mod.MoeDims:
+    return moe_mod.MoeDims(
+        cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts, cfg.top_k,
+        cfg.n_shared_experts, capacity_factor=cfg.capacity_factor,
+    )
+
+
+# ---------------------------------------------------------------------------
+# single layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ArchConfig, mixer: str, channel: str,
+                cross: bool = False):
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    p["norm1"], _ = L.norm_init(cfg.norm, cfg.d_model)
+    if mixer in ("attn", "local", "bidir"):
+        p["mix"], _ = L.attn_init(keys[0], cfg.d_model, _attn_dims(cfg))
+    elif mixer == "mla":
+        p["mix"], _ = L.mla_init(keys[0], cfg.d_model, _mla_dims(cfg))
+    elif mixer == "rglru":
+        p["mix"], _ = ssm_mod.rglru_init(keys[0], _rglru_dims(cfg))
+    elif mixer == "ssd":
+        p["mix"], _ = ssm_mod.ssd_init(keys[0], _ssd_dims(cfg))
+    elif mixer != "none":
+        raise ValueError(mixer)
+    if cross:
+        p["norm_x"], _ = L.norm_init(cfg.norm, cfg.d_model)
+        p["cross"], _ = L.attn_init(keys[1], cfg.d_model, _attn_dims(cfg))
+    if channel == "mlp":
+        p["norm2"], _ = L.norm_init(cfg.norm, cfg.d_model)
+        p["chan"], _ = L.mlp_init(keys[2], cfg.d_model, cfg.d_ff, gated=True)
+    elif channel == "moe":
+        p["norm2"], _ = L.norm_init(cfg.norm, cfg.d_model)
+        p["chan"], _ = moe_mod.moe_init(keys[2], _moe_dims(cfg))
+    elif channel != "none":
+        raise ValueError(channel)
+    return p
+
+
+def _layer_apply(p: Params, cfg: ArchConfig, mixer: str, channel: str,
+                 x: jnp.ndarray, positions: jnp.ndarray,
+                 memory: Optional[jnp.ndarray] = None):
+    """Full-sequence layer.  Returns (x, aux)."""
+    aux = jnp.float32(0.0)
+    dt = x.dtype  # residual stream dtype must stay stable (scan carry)
+    h = L.apply_norm(cfg.norm, p.get("norm1"), x)
+    if mixer in ("attn", "local", "bidir"):
+        win = cfg.window if mixer == "local" else None
+        causal = mixer != "bidir"
+        if causal:
+            y = L.mha(p["mix"], h, _attn_dims(cfg), positions=positions,
+                      rope_theta=cfg.rope_theta, window=win)
+        else:
+            y = L.mha_bidir(p["mix"], h, _attn_dims(cfg), positions=positions,
+                            rope_theta=cfg.rope_theta)
+        x = x + y.astype(dt)
+    elif mixer == "mla":
+        x = x + L.mla(p["mix"], h, _mla_dims(cfg), positions=positions,
+                      rope_theta=cfg.rope_theta).astype(dt)
+    elif mixer == "rglru":
+        x = x + ssm_mod.rglru(p["mix"], h, _rglru_dims(cfg)).astype(dt)
+    elif mixer == "ssd":
+        x = x + ssm_mod.ssd(p["mix"], h, _ssd_dims(cfg)).astype(dt)
+    if "cross" in p:
+        hx = L.apply_norm(cfg.norm, p.get("norm_x"), x)
+        x = x + L.cross_attn(p["cross"], hx, memory, _attn_dims(cfg)).astype(dt)
+    if channel in ("mlp", "moe"):
+        h2 = L.apply_norm(cfg.norm, p.get("norm2"), x)
+        if channel == "mlp":
+            x = x + L.mlp(p["chan"], h2, act=cfg.act).astype(dt)
+        else:
+            y, a = moe_mod.moe_apply(p["chan"], h2, _moe_dims(cfg))
+            x = x + y.astype(dt)
+            aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    p["embed"], _ = embed_mod.embed_init(
+        keys[0], embed_mod.EmbedDims(cfg.vocab_size, cfg.d_model,
+                                     cfg.hot_vocab_rows), dtype)
+    pattern = cfg.layer_pattern()
+    period = len(pattern)
+    n_periods = cfg.n_layers // period
+    n_tail = cfg.n_layers % period
+    cross = cfg.n_enc_layers > 0
+
+    def one_period(k):
+        ks = jax.random.split(k, period)
+        return tuple(
+            _layer_init(ks[i], cfg, m, c, cross=cross)
+            for i, (m, c) in enumerate(pattern)
+        )
+
+    p["periods"] = jax.vmap(one_period)(jax.random.split(keys[1], n_periods))
+    if n_tail:
+        ks = jax.random.split(keys[2], n_tail)
+        p["tail"] = tuple(
+            _layer_init(ks[i], cfg, *pattern[i % period], cross=cross)
+            for i in range(n_tail)
+        )
+    if cfg.n_enc_layers:
+        ks = jax.random.split(keys[3], cfg.n_enc_layers)
+
+        def one_enc(k):
+            return _layer_init(k, cfg, "bidir", "mlp")
+
+        p["encoder"] = jax.vmap(one_enc)(ks)
+        p["enc_norm"], _ = L.norm_init(cfg.norm, cfg.d_model)
+    if cfg.prefix_len:
+        p["prefix_proj"], _ = L.dense_init(keys[4], cfg.d_model, cfg.d_model,
+                                           ("embed", "embed"))
+    p["final_norm"], _ = L.norm_init(cfg.norm, cfg.d_model)
+    if dtype != jnp.float32:
+        p = jax.tree.map(lambda a: a.astype(dtype), p)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg: ArchConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Encoder stack over stub frame embeddings (B, S_src, D)."""
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32), frames.shape[:2])
+
+    def enc_layer(x, lp):
+        x, _ = _layer_apply(lp, cfg, "bidir", "mlp", x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(enc_layer, frames, params["encoder"])
+    return L.apply_norm(cfg.norm, params.get("enc_norm"), x)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            prefix: Optional[jnp.ndarray] = None,
+            frames: Optional[jnp.ndarray] = None,
+            last_only: bool = False,
+            return_hidden: bool = False):
+    """Returns (logits (B, S_total, V), aux).  ``prefix``: VLM patch embeds
+    (B, P, D); ``frames``: audio encoder stub input (B, S_src, D).
+    ``last_only``: unembed only the final position (prefill serving).
+    ``return_hidden``: skip the unembedding (chunked-loss path)."""
+    x = embed_mod.embed_lookup(
+        params["embed"], tokens,
+        embed_mod.EmbedDims(cfg.vocab_size, cfg.d_model, cfg.hot_vocab_rows))
+    if prefix is not None:
+        pe = prefix @ params["prefix_proj"]["w"]
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    memory = _encode(params, cfg, frames) if frames is not None else None
+
+    b, s, _ = x.shape
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    pattern = cfg.layer_pattern()
+
+    seq_axis = "seq" if cfg.seq_parallel else None
+
+    def period_fn(carry, period_params):
+        x, aux = carry
+        # Megatron-SP: the period-boundary residual (the scan-saved carry)
+        # shards along S; layers all-gather/reduce-scatter internally.
+        x = constrain(x, "batch", seq_axis, None)
+        for i, (m, c) in enumerate(pattern):
+            x, a = _layer_apply(period_params[i], cfg, m, c, x, positions,
+                                memory=memory)
+            aux = aux + a
+        x = constrain(x, "batch", seq_axis, None)
+        return (x, aux), None
+
+    body = period_fn
+    if cfg.remat:
+        body = jax.checkpoint(period_fn, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["periods"])
+    if "tail" in params:
+        for i, lp in enumerate(params["tail"]):
+            m, c = pattern[i % len(pattern)]
+            x, a = _layer_apply(lp, cfg, m, c, x, positions, memory=memory)
+            aux = aux + a
+    x = L.apply_norm(cfg.norm, params.get("final_norm"), x)
+    if return_hidden:
+        return x, aux
+    if last_only:
+        x = x[:, -1:]
+    logits = embed_mod.unembed(params["embed"], x)
+    logits = constrain(logits, "batch", None, "model")
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, prefix=None, frames=None,
+            aux_weight: float = 0.01, loss_chunk: int = 0):
+    """Next-token CE.  ``loss_chunk`` > 0 computes the vocab projection +
+    logsumexp over sequence chunks under remat — the (B, S, V) logits tensor
+    is never materialized (perf iteration M2, EXPERIMENTS.md §Perf)."""
+    if loss_chunk:
+        hidden, aux = forward(params, cfg, tokens, prefix=prefix,
+                              frames=frames, return_hidden=True)
+        if prefix is not None:
+            hidden = hidden[:, prefix.shape[1]:]
+        b, s, d = hidden.shape
+        c = min(loss_chunk, s)
+        nc = s // c
+        hc = jnp.moveaxis(hidden[:, : nc * c].reshape(b, nc, c, d), 1, 0)
+        lc = jnp.moveaxis(labels[:, : nc * c].reshape(b, nc, c), 1, 0)
+
+        @jax.checkpoint
+        def chunk_ce(hx, lx):
+            logits = unembed_apply(params, hx).astype(jnp.float32)
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+            return jnp.sum(logz - gold)
+
+        def body(acc, xs):
+            hx, lx = xs
+            return acc + chunk_ce(hx, lx), None
+
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, lc))
+        ce = total / (b * nc * c)
+    else:
+        logits, aux = forward(params, cfg, tokens, prefix=prefix, frames=frames)
+        if prefix is not None:
+            logits = logits[:, prefix.shape[1]:]
+        logits = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+    return ce + aux_weight * aux / max(1, cfg.n_layers)
+
+
+def unembed_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return embed_mod.unembed(params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# decode: cache init + single-token step
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ArchConfig, mixer: str, b: int, max_len: int,
+                 dtype=jnp.bfloat16) -> Params:
+    dh = cfg.head_dim
+    if mixer == "attn":
+        shape = (b, max_len, cfg.n_kv_heads, dh)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if mixer == "local":
+        w = min(cfg.window, max_len)
+        shape = (b, w, cfg.n_kv_heads, dh)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "pos": jnp.full((w,), -1, jnp.int32)}
+    if mixer == "mla":
+        return {
+            "latent": jnp.zeros((b, max_len, cfg.kv_lora), dtype),
+            "krope": jnp.zeros((b, max_len, cfg.mla_d_rope), dtype),
+        }
+    if mixer == "ssd":
+        d = _ssd_dims(cfg)
+        return {
+            "h": jnp.zeros((b, d.n_heads, d.d_state, d.d_head), jnp.float32),
+            "conv": jnp.zeros((b, d.d_conv - 1, d.d_inner), jnp.float32),
+        }
+    if mixer == "rglru":
+        d = _rglru_dims(cfg)
+        return {
+            "h": jnp.zeros((b, d.width), jnp.float32),
+            "conv": jnp.zeros((b, d.d_conv - 1, d.width), jnp.float32),
+        }
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ArchConfig, b: int, max_len: int, dtype=jnp.bfloat16):
+    pattern = cfg.layer_pattern()
+    period = len(pattern)
+    n_periods = cfg.n_layers // period
+    n_tail = cfg.n_layers % period
+
+    def stack(c):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape), c)
+
+    cache: Params = {
+        "periods": tuple(
+            stack(_layer_cache(cfg, m, b, max_len, dtype)) for (m, _c) in pattern
+        ),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if n_tail:
+        cache["tail"] = tuple(
+            _layer_cache(cfg, pattern[i % period][0], b, max_len, dtype)
+            for i in range(n_tail)
+        )
+    if cfg.n_enc_layers:
+        # cross-attn K/V precomputed from encoder memory at prefill; for the
+        # decode dry-run cells we allocate a fixed S_enc = 4096 memory.
+        s_enc = 4096
+        dh = cfg.head_dim
+        cache["cross_k"] = jnp.zeros((b, s_enc, cfg.n_kv_heads, dh), dtype)
+        cache["cross_v"] = jnp.zeros((b, s_enc, cfg.n_kv_heads, dh), dtype)
+    return cache
+
+
+def _mixer_decode(p, cfg: ArchConfig, mixer: str, h, cache, cur_len):
+    if mixer == "attn":
+        y, ck, cv = L.mha_decode(p["mix"], h, _attn_dims(cfg), cache["k"],
+                                 cache["v"], cur_len, rope_theta=cfg.rope_theta)
+        return y, {"k": ck, "v": cv}
+    if mixer == "local":
+        y, cache = _mha_decode_ring(p["mix"], h, cfg, cache, cur_len)
+        return y, cache
+    if mixer == "mla":
+        y, cl, ckr = L.mla_decode(p["mix"], h, _mla_dims(cfg), cache["latent"],
+                                  cache["krope"], cur_len,
+                                  rope_theta=cfg.rope_theta)
+        return y, {"latent": cl, "krope": ckr}
+    if mixer == "ssd":
+        y, hs, conv = ssm_mod.ssd_decode(p["mix"], h, _ssd_dims(cfg),
+                                         cache["h"], cache["conv"])
+        return y, {"h": hs, "conv": conv}
+    if mixer == "rglru":
+        y, hs, conv = ssm_mod.rglru_decode(p["mix"], h, _rglru_dims(cfg),
+                                           cache["h"], cache["conv"])
+        return y, {"h": hs, "conv": conv}
+    raise ValueError(mixer)
+
+
+def _mha_decode_ring(p, h, cfg: ArchConfig, cache, cur_len):
+    """Sliding-window decode with a ring-buffer KV cache of width W."""
+    import math as _math
+
+    dims = _attn_dims(cfg)
+    b = h.shape[0]
+    w = cache["k"].shape[1]
+    q = (h @ p["q"]["w"]).reshape(b, 1, dims.n_heads, dims.d_head)
+    k = (h @ p["k"]["w"]).reshape(b, 1, dims.n_kv, dims.d_head)
+    v = (h @ p["v"]["w"]).reshape(b, 1, dims.n_kv, dims.d_head)
+    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    q = L.rope(q, pos, cfg.rope_theta)
+    k = L.rope(k, pos, cfg.rope_theta)
+    slot = jnp.mod(cur_len, w)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                             slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                             slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), cur_len, jnp.int32), slot, axis=0)
+    g = dims.n_heads // dims.n_kv
+    qr = q.reshape(b, dims.n_kv, g, dims.d_head)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qr, ck.astype(jnp.float32))
+    sc = sc / _math.sqrt(dims.d_head)
+    valid = jnp.logical_and(cpos >= 0, cpos > cur_len - w)
+    valid = jnp.logical_and(valid, cpos <= cur_len)
+    sc = jnp.where(valid[None, None, None, :], sc, -jnp.inf)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", pr, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, dims.n_heads * dims.d_head).astype(h.dtype)
+    return out @ p["o"]["w"], {"k": ck, "v": cv, "pos": cpos}
+
+
+def _layer_decode(p, cfg: ArchConfig, mixer: str, channel: str, x, cache,
+                  cur_len, cross_kv=None):
+    dt = x.dtype  # keep the residual stream dtype stable (scan carry!)
+    h = L.apply_norm(cfg.norm, p.get("norm1"), x)
+    y, cache = _mixer_decode(p, cfg, mixer, h, cache, cur_len)
+    x = x + y.astype(dt)
+    if "cross" in p and cross_kv is not None:
+        hx = L.apply_norm(cfg.norm, p.get("norm_x"), x)
+        x = x + _cross_decode(p["cross"], hx, cfg, *cross_kv).astype(dt)
+    if channel in ("mlp", "moe"):
+        h2 = L.apply_norm(cfg.norm, p.get("norm2"), x)
+        if channel == "mlp":
+            x = x + L.mlp(p["chan"], h2, act=cfg.act).astype(dt)
+        else:
+            y2, _ = moe_mod.moe_apply(p["chan"], h2, _moe_dims(cfg))
+            x = x + y2.astype(dt)
+    return x, cache
+
+
+def _cross_decode(p, x, cfg: ArchConfig, ck, cv):
+    import math as _math
+
+    dims = _attn_dims(cfg)
+    b = x.shape[0]
+    q = (x @ p["q"]["w"]).reshape(b, 1, dims.n_heads, dims.d_head)
+    g = dims.n_heads // dims.n_kv
+    qr = q.reshape(b, dims.n_kv, g, dims.d_head)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qr, ck.astype(jnp.float32))
+    sc = sc / _math.sqrt(dims.d_head)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", pr, cv.astype(jnp.float32))
+    return out.reshape(b, 1, -1).astype(x.dtype) @ p["o"]["w"]
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                token: jnp.ndarray):
+    """One new token for every sequence. token: (B, 1) int32.
+    Returns (logits (B, 1, V), new cache)."""
+    cur_len = cache["len"]
+    x = embed_mod.embed_lookup(
+        params["embed"], token,
+        embed_mod.EmbedDims(cfg.vocab_size, cfg.d_model, cfg.hot_vocab_rows))
+    pattern = cfg.layer_pattern()
+    cross_kv = None
+    if cfg.n_enc_layers:
+        cross_kv = (cache["cross_k"], cache["cross_v"])
+
+    # scan over periods; inside each period apply its pattern slots in order
+    def period_step(x, inp):
+        period_params, period_cache = inp
+        new_cache = []
+        for i, (m, c) in enumerate(pattern):
+            x, nc = _layer_decode(period_params[i], cfg, m, c, x,
+                                  period_cache[i], cur_len, cross_kv=cross_kv)
+            new_cache.append(nc)
+        return x, tuple(new_cache)
+
+    x, new_caches = jax.lax.scan(period_step, x,
+                                 (params["periods"], cache["periods"]))
+    out_cache = dict(cache)
+    out_cache["periods"] = new_caches
+    if "tail" in params:
+        new_tail = []
+        for i, lp in enumerate(params["tail"]):
+            m, c = pattern[i % len(pattern)]
+            x, nc = _layer_decode(lp, cfg, m, c, x, cache["tail"][i], cur_len,
+                                  cross_kv=cross_kv)
+            new_tail.append(nc)
+        out_cache["tail"] = tuple(new_tail)
+    out_cache["len"] = cur_len + 1
+    x = L.apply_norm(cfg.norm, params.get("final_norm"), x)
+    logits = embed_mod.unembed(params["embed"], x)
+    return logits, out_cache

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts with DBG stable-bin dispatch (integration K3).
+
+Token→expert dispatch is a binning problem.  Sort-based dispatch (argsort by
+expert id) is the paper's "Sort": it destroys token order.  We use the DBG
+discipline instead — STABLE grouping: each (token, choice) slot gets a rank
+within its expert equal to the count of earlier same-expert slots (exclusive
+cumsum over the one-hot expert matrix — the same computation as
+``repro.kernels.hist_bin.ops.stable_mapping_from_groups``).  Original token
+order is preserved inside every expert's panel, so the combine gather is
+monotone per expert (sequence-local) and the inverse mapping is cheap.
+
+Static shapes throughout (capacity-bounded, GShard-style dropping) — jit/pjit
+friendly; experts are sharded on the model axis (EP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.constrain import constrain
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeDims:
+    d_model: int
+    d_ff: int  # per-expert intermediate
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    shared_d_ff: int = 0  # defaults to n_shared * d_ff
+    capacity_factor: float = 1.25
+
+
+def moe_init(key, dims: MoeDims):
+    ks = jax.random.split(key, 6)
+    e, d, f = dims.n_experts, dims.d_model, dims.d_ff
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+    p: Params = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), jnp.float32) * scale_in},
+        "gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in,
+        "up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale_in,
+        "down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * scale_out,
+    }
+    meta = {
+        "router": {"w": ("embed", None)},
+        "gate": ("experts", "embed", "ff"),
+        "up": ("experts", "embed", "ff"),
+        "down": ("experts", "ff", "embed"),
+    }
+    if dims.n_shared:
+        sf = dims.shared_d_ff or dims.n_shared * f
+        p["shared"] = {
+            "gate": {"w": jax.random.normal(ks[4], (d, sf), jnp.float32) * scale_in},
+            "up": {"w": jax.random.normal(ks[5], (d, sf), jnp.float32) * scale_in},
+            "down": {"w": jax.random.normal(ks[0], (sf, d), jnp.float32)
+                     * (1.0 / math.sqrt(sf))},
+        }
+        meta["shared"] = {
+            "gate": {"w": ("embed", "ff")},
+            "up": {"w": ("embed", "ff")},
+            "down": {"w": ("ff", "embed")},
+        }
+    return p, meta
+
+
+def stable_bin_dispatch(
+    expert_ids: jnp.ndarray,  # (T, K) int32
+    n_experts: int,
+    capacity: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """DBG stable binning of (token, choice) slots into expert bins.
+
+    Returns (rank, keep): rank (T, K) — the slot's stable position inside its
+    expert's panel; keep (T, K) — False for capacity-dropped slots.  Original
+    token order preserved within each expert (coarse-grain, no sort).
+    """
+    t, k = expert_ids.shape
+    flat = expert_ids.reshape(t * k)
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (T*K, E)
+    rank = jnp.cumsum(onehot, axis=0) - onehot  # exclusive: earlier same-expert
+    rank = jnp.take_along_axis(rank, flat[:, None], axis=1)[:, 0]
+    keep = rank < capacity
+    return rank.reshape(t, k), keep.reshape(t, k)
+
+
+def moe_apply(params: Params, x: jnp.ndarray, dims: MoeDims):
+    """x: (B, S, D) -> (out, aux_loss).  Routed top-k + optional shared experts."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = dims.n_experts, dims.top_k
+
+    logits = xt @ params["router"]["w"]  # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(math.ceil(t * k * dims.capacity_factor / e))
+    capacity = max(8, -(-capacity // 8) * 8)  # round up to 8 (sublane friendly)
+    rank, keep = stable_bin_dispatch(top_e.astype(jnp.int32), e, capacity)
+
+    # dispatch: panels (E, C, D)
+    w_keep = jnp.where(keep, top_p, 0.0)
+    flat_e = top_e.reshape(t * k)
+    flat_r = jnp.where(keep.reshape(t * k), rank.reshape(t * k), capacity - 1)
+    flat_w = w_keep.reshape(t * k)
+    src = jnp.repeat(jnp.arange(t), k)
+    panels = jnp.zeros((e, capacity, d), x.dtype)
+    contrib = jnp.where(keep.reshape(t * k, 1), xt[src], 0.0)
+    panels = panels.at[flat_e, flat_r].add(contrib)
+    # TP-within-expert: capacity rows shard on the batch axes (the dispatch
+    # all-to-all), FF dim shards on 'model' via the weight sharding; the
+    # down-projection contraction psums over 'model'.
+    panels = constrain(panels, None, "batch", None)
+
+    # expert FFN (einsum over stacked experts)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", panels, params["gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", panels, params["up"])
+    h = constrain(h, None, "batch", "model")
+    out_panels = jnp.einsum("ecf,efd->ecd", h, params["down"])  # (E, C, D)
+    out_panels = constrain(out_panels, None, "batch", None)
+
+    # combine: weighted gather back (monotone per expert — stable binning)
+    gathered = out_panels[flat_e, flat_r]  # (T*K, D)
+    yt = jax.ops.segment_sum(gathered * flat_w[:, None], src, num_segments=t)
+
+    if "shared" in params:
+        sp = params["shared"]
+        hs = jax.nn.silu(xt @ sp["gate"]["w"]) * (xt @ sp["up"]["w"])
+        yt = yt + hs @ sp["down"]["w"]
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    frac = jnp.mean(
+        (jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32)), axis=0
+    )
+    pmean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * pmean)
+    return yt.reshape(b, s, d).astype(x.dtype), aux
+
+
+def moe_apply_ref(params: Params, x: jnp.ndarray, dims: MoeDims):
+    """Dense oracle (no capacity drops): every token through its top-k experts
+    via full (T, E) weighting — used by tests to validate the stable-bin path."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = dims.n_experts, dims.top_k
+    logits = xt @ params["router"]["w"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    weights = jnp.zeros((t, e), jnp.float32).at[
+        jnp.repeat(jnp.arange(t), k), top_e.reshape(-1)
+    ].add(top_p.reshape(-1))
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, params["gate"]))
+    h = h * jnp.einsum("td,edf->tef", xt, params["up"])
+    oe = jnp.einsum("tef,efd->ted", h, params["down"])
+    yt = jnp.einsum("te,ted->td", weights, oe)
+    if "shared" in params:
+        sp = params["shared"]
+        hs = jax.nn.silu(xt @ sp["gate"]["w"]) * (xt @ sp["up"]["w"])
+        yt = yt + hs @ sp["down"]["w"]
+    return yt.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,276 @@
+"""Recurrent token mixers: Mamba-2 SSD (state-space duality) and Griffin's
+RG-LRU (RecurrentGemma).  Both expose a full-sequence form (train/prefill) and
+a single-step form (decode) carrying explicit state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SsdDims:
+    d_model: int
+    d_state: int = 128
+    d_head: int = 64
+    expand: int = 2
+    chunk: int = 256
+    d_conv: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.d_head
+
+
+def ssd_init(key, dims: SsdDims):
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    d_in = dims.d_model
+    di = dims.d_inner
+    # fused input projection: [z (gate), x, B, C, dt]
+    zxbcdt = di + di + dims.d_state + dims.d_state + dims.n_heads
+    p["in_proj"], _ = dense_init(ks[0], d_in, zxbcdt, ("embed", "ff"))
+    p["conv_w"] = jax.random.normal(ks[1], (dims.d_conv, di), jnp.float32) * 0.1
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, dims.n_heads, dtype=jnp.float32))
+    p["D"] = jnp.ones((dims.n_heads,), jnp.float32)
+    p["dt_bias"] = jnp.zeros((dims.n_heads,), jnp.float32)
+    p["out_proj"], _ = dense_init(ks[2], di, d_in, ("ff", "embed"))
+    meta = {
+        "in_proj": {"w": ("embed", "ff")},
+        "conv_w": ("conv", "ff"),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "out_proj": {"w": ("ff", "embed")},
+    }
+    return p, meta
+
+
+def _split_proj(p, x, dims: SsdDims):
+    di = dims.d_inner
+    zxbcdt = x @ p["in_proj"]["w"]
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di : 2 * di]
+    b = zxbcdt[..., 2 * di : 2 * di + dims.d_state]
+    c = zxbcdt[..., 2 * di + dims.d_state : 2 * di + 2 * dims.d_state]
+    dt = zxbcdt[..., 2 * di + 2 * dims.d_state :]
+    return z, xs, b, c, dt
+
+
+def _causal_conv(xs, conv_w, state=None):
+    """Depthwise causal conv along time. xs: (B, S, di); conv_w: (K, di).
+    Returns (out, tail) where tail is the last K-1 inputs (decode state)."""
+    k = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xs.shape[0], k - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xs], axis=1)
+    out = sum(xp[:, i : i + xs.shape[1]] * conv_w[i] for i in range(k))
+    tail = xp[:, -(k - 1) :] if k > 1 else None
+    return jax.nn.silu(out), tail
+
+
+def ssd(params: Params, x: jnp.ndarray, dims: SsdDims):
+    """Full-sequence SSD (chunked): O(S * chunk) intra + O(S/chunk) scan inter.
+
+    Faithful to Mamba-2's SSD decomposition: within chunks, the 1-semiseparable
+    attention form; across chunks, exact state recurrence.
+    """
+    bsz, s_orig, _ = x.shape
+    # pad S to a chunk multiple: padding sits causally AFTER real tokens, so
+    # real outputs are unaffected; padded outputs are truncated below.
+    pad = (-s_orig) % dims.chunk
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((bsz, pad, x.shape[2]), x.dtype)], axis=1)
+    s = x.shape[1]
+    z, xs, bmat, cmat, dt = _split_proj(params, x, dims)
+    xs, _ = _causal_conv(xs, params["conv_w"])
+    h, dh, n = dims.n_heads, dims.d_head, dims.d_state
+    xh = xs.reshape(bsz, s, h, dh)
+    dt = jax.nn.softplus(dt + params["dt_bias"])  # (B, S, H)
+    a = -jnp.exp(params["A_log"])  # (H,) negative
+    # per-step decay: alpha_t = exp(dt_t * a)  in (0, 1)
+    log_alpha = dt * a[None, None, :]  # (B, S, H)
+
+    nc = s // dims.chunk
+    ch = dims.chunk
+    xh = xh.reshape(bsz, nc, ch, h, dh)
+    bmat = bmat.reshape(bsz, nc, ch, n)
+    cmat = cmat.reshape(bsz, nc, ch, n)
+    log_a = log_alpha.reshape(bsz, nc, ch, h)
+    dtc = dt.reshape(bsz, nc, ch, h)
+
+    # cumulative within chunk: La[t] = sum_{i<=t} log_alpha_i
+    la_cum = jnp.cumsum(log_a, axis=2)  # (B, nc, ch, H)
+
+    # ---- intra-chunk (1-SS attention form) ----
+    # score[t, u] = C_t . B_u * exp(La_t - La_u) * dt_u   for u <= t
+    cb = jnp.einsum("bntk,bnuk->bntu", cmat, bmat)  # (B, nc, ch, ch)
+    seg = la_cum[:, :, :, None, :] - la_cum[:, :, None, :, :]  # (B,nc,t,u,H)
+    tri = jnp.tril(jnp.ones((ch, ch), bool))
+    # mask INSIDE the exponent: exp of the (positive) upper triangle would
+    # overflow and poison the backward pass through jnp.where
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    w = jnp.exp(seg)
+    scores = cb[..., None] * w * dtc[:, :, None, :, :]  # (B,nc,t,u,H)
+    y_intra = jnp.einsum("bntuh,bnuhd->bnthd", scores, xh)
+
+    # ---- chunk states + inter-chunk scan ----
+    # state contribution of chunk: sum_u exp(La_end - La_u) * dt_u * B_u x_u^T
+    rem = la_cum[:, :, -1:, :] - la_cum  # (B, nc, ch, H)
+    contrib = jnp.einsum(
+        "bnuh,bnuk,bnuhd->bnhkd", jnp.exp(rem) * dtc, bmat, xh
+    )  # (B, nc, H, N, dh)
+    decay = jnp.exp(la_cum[:, :, -1, :])  # (B, nc, H) whole-chunk decay
+
+    def scan_fn(hstate, inp):
+        dec, con = inp  # (B,H), (B,H,N,dh)
+        new = hstate * dec[..., None, None] + con
+        return new, hstate  # emit PREVIOUS state (state entering the chunk)
+
+    h0 = jnp.zeros((bsz, h, n, dh), jnp.float32)
+    _, h_in = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(contrib.astype(jnp.float32), 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B, nc, H, N, dh) state entering each chunk
+
+    # inter-chunk output: y_t += C_t . (exp(La_t) * h_in)
+    y_inter = jnp.einsum(
+        "bntk,bnth,bnhkd->bnthd", cmat, jnp.exp(la_cum), h_in.astype(x.dtype)
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, dh)
+    y = y + xh.reshape(bsz, s, h, dh) * params["D"][None, None, :, None]
+    y = y.reshape(bsz, s, dims.d_inner) * jax.nn.silu(z)
+    out = y @ params["out_proj"]["w"]
+    return out[:, :s_orig] if pad else out
+
+
+def ssd_decode(params: Params, x: jnp.ndarray, dims: SsdDims,
+               hstate: jnp.ndarray, conv_tail: jnp.ndarray):
+    """One-token SSD step. x: (B, 1, D); hstate: (B, H, N, dh);
+    conv_tail: (B, K-1, di).  Returns (y, hstate, conv_tail)."""
+    bsz = x.shape[0]
+    z, xs, bvec, cvec, dt = _split_proj(params, x, dims)
+    xs, conv_tail = _causal_conv(xs, params["conv_w"], state=conv_tail)
+    h, dh, n = dims.n_heads, dims.d_head, dims.d_state
+    xh = xs.reshape(bsz, h, dh)
+    dt = jax.nn.softplus(dt + params["dt_bias"])[:, 0]  # (B, H)
+    a = -jnp.exp(params["A_log"])
+    alpha = jnp.exp(dt * a[None, :])  # (B, H)
+    bv = bvec[:, 0]  # (B, N)
+    cv = cvec[:, 0]
+    hstate = hstate * alpha[..., None, None] + jnp.einsum(
+        "bh,bk,bhd->bhkd", dt, bv, xh
+    )
+    y = jnp.einsum("bk,bhkd->bhd", cv, hstate)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, dims.d_inner) * jax.nn.silu(z)
+    return y @ params["out_proj"]["w"], hstate, conv_tail
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RglruDims:
+    d_model: int
+    d_rnn: int = 0  # defaults to d_model
+    d_conv: int = 4
+    c: float = 8.0  # Griffin's recurrence sharpness constant
+
+    @property
+    def width(self) -> int:
+        return self.d_rnn or self.d_model
+
+
+def rglru_init(key, dims: RglruDims):
+    ks = jax.random.split(key, 6)
+    w = dims.width
+    p: Params = {}
+    p["in_x"], _ = dense_init(ks[0], dims.d_model, w, ("embed", "ff"))
+    p["in_gate"], _ = dense_init(ks[1], dims.d_model, w, ("embed", "ff"))
+    p["conv_w"] = jax.random.normal(ks[2], (dims.d_conv, w), jnp.float32) * 0.1
+    p["rg_w"], _ = dense_init(ks[3], w, w, ("ff", "ff"))
+    p["ig_w"], _ = dense_init(ks[4], w, w, ("ff", "ff"))
+    # Lambda init so sigmoid(lam) in (0.9, 0.999) — Griffin's stable band
+    p["lam"] = jnp.log(jnp.linspace(9.0, 999.0, w).astype(jnp.float32))
+    p["out"], _ = dense_init(ks[5], w, dims.d_model, ("ff", "embed"))
+    meta = {
+        "in_x": {"w": ("embed", "ff")}, "in_gate": {"w": ("embed", "ff")},
+        "conv_w": ("conv", "ff"), "rg_w": {"w": ("ff", "ff")},
+        "ig_w": {"w": ("ff", "ff")}, "lam": ("ff",),
+        "out": {"w": ("ff", "embed")},
+    }
+    return p, meta
+
+
+def _rglru_core(params, xs, dims: RglruDims, h0=None):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t)
+    via associative scan. xs: (B, S, W). Returns (ys, h_last)."""
+    r = jax.nn.sigmoid(xs @ params["rg_w"]["w"])
+    i = jax.nn.sigmoid(xs @ params["ig_w"]["w"])
+    log_a_base = -jax.nn.softplus(-params["lam"])  # log sigmoid(lam)
+    log_a = dims.c * r * log_a_base[None, None, :]  # (B, S, W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * xs)
+
+    def combine(x1, x2):
+        a1, b1 = x1
+        a2, b2 = x2
+        return a1 * a2, b1 * a2 + b2
+
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+    a_sc, b_sc = jax.lax.associative_scan((combine), (a, gated), axis=1)
+    return b_sc, b_sc[:, -1]
+
+
+def rglru(params: Params, x: jnp.ndarray, dims: RglruDims):
+    """Full-sequence Griffin recurrent block:
+    x -> (linear, linear-gate) -> conv1d -> RG-LRU -> gate -> out."""
+    gate = jax.nn.gelu(x @ params["in_gate"]["w"])
+    xs = x @ params["in_x"]["w"]
+    xs, _ = _causal_conv(xs, params["conv_w"])
+    ys, _ = _rglru_core(params, xs, dims)
+    return (ys * gate) @ params["out"]["w"]
+
+
+def rglru_decode(params: Params, x: jnp.ndarray, dims: RglruDims,
+                 hstate: jnp.ndarray, conv_tail: jnp.ndarray):
+    """One-token step. x: (B, 1, D); hstate: (B, W)."""
+    gate = jax.nn.gelu(x @ params["in_gate"]["w"])
+    xs = x @ params["in_x"]["w"]
+    xs, conv_tail = _causal_conv(xs, params["conv_w"], state=conv_tail)
+    r = jax.nn.sigmoid(xs @ params["rg_w"]["w"])[:, 0]
+    i = jax.nn.sigmoid(xs @ params["ig_w"]["w"])[:, 0]
+    log_a_base = -jax.nn.softplus(-params["lam"])
+    log_a = dims.c * r * log_a_base[None, :]
+    a = jnp.exp(log_a)
+    h = a * hstate + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (
+        i * xs[:, 0]
+    )
+    y = (h[:, None, :] * gate) @ params["out"]["w"]
+    return y, h, conv_tail

@@ -1,0 +1,1 @@
+from .analysis import HW, model_flops, parse_collective_bytes, roofline_terms  # noqa: F401

@@ -1,0 +1,1 @@
+from .engine import generate  # noqa: F401

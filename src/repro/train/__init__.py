@@ -1,0 +1,1 @@
+from . import compress, step  # noqa: F401

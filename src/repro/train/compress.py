@@ -1,0 +1,60 @@
+"""int8 error-feedback gradient compression for the cross-pod (DCI) hop.
+
+The paper's philosophy applied to collectives: keep the high-reuse traffic
+(intra-pod reduce-scatter over fast ICI) exact, compress only the long-haul
+cold hop.  Error feedback (Seide et al.; Karimireddy et al.) keeps SGD/Adam
+convergence: the quantization residual is added back into the next step's
+gradient before quantizing.
+
+``compressed_psum`` is used inside ``shard_map`` over the 'pod' axis; tests
+validate numerics on a host mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
+           "ef_compress_grads"]
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Mean-reduce over ``axis_name`` with int8 payload (per-tensor scale).
+
+    int8 payloads sum in int32 (no overflow for <= 2^23 participants); scales
+    are reduced exactly in f32 — max-scale normalization keeps the estimate
+    unbiased up to rounding.
+    """
+    n = jax.lax.psum(1, axis_name)
+    smax = jax.lax.pmax(jnp.max(jnp.abs(x)) / 127.0 + 1e-12, axis_name)
+    q = jnp.clip(jnp.round(x / smax), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * smax / n
+
+
+def ef_compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Error-feedback: g' = Q(g + r); r' = (g + r) - g'. Applied leaf-wise."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(tdef, [p[0] for p in pairs]),
+            jax.tree.unflatten(tdef, [p[1] for p in pairs]))

@@ -1,0 +1,142 @@
+"""Training step: AdamW + global-norm clip + warmup-cosine schedule.
+
+Pure-pytree optimizer (no optax dependency).  Master params live in f32 and
+are sharded per repro.dist.sharding (FSDP on 'data', TP on 'model'); the
+forward computes in ``compute_dtype`` (bf16 on TPU).  Moments inherit the
+param sharding — ZeRO-style state partitioning falls out of GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..lm import model as model_mod
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compute_dtype: str = "bfloat16"
+    # ---- perf knobs (EXPERIMENTS.md §Perf) ----
+    grad_accum: int = 1       # microbatches per step (activation peak / A)
+    loss_chunk: int = 0       # CE over sequence chunks; 0 = full logits
+    moment_dtype: str = "float32"  # bf16 halves optimizer-state HBM
+
+
+def init_opt(params: Params, moment_dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=moment_dtype), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(step, oc: OptConfig):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, oc.warmup))
+    prog = jnp.clip((step - oc.warmup) / max(1, oc.total_steps - oc.warmup), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def cast_params(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params,
+    )
+
+
+def make_train_step(cfg: ArchConfig, oc: OptConfig):
+    """Returns train_step(params, opt, batch) -> (params, opt, metrics).
+
+    ``batch``: dict with tokens/labels (+ prefix/frames stubs when the arch
+    needs them).  Suitable for jax.jit with in/out shardings.
+    """
+    cdtype = jnp.bfloat16 if oc.compute_dtype == "bfloat16" else jnp.float32
+
+    def loss_of(params, batch):
+        p = cast_params(params, cdtype)
+        return model_mod.loss_fn(
+            p, cfg, batch["tokens"], batch["labels"],
+            prefix=batch.get("prefix"), frames=batch.get("frames"),
+            loss_chunk=oc.loss_chunk,
+        )
+
+    def grads_of(params, batch):
+        if oc.grad_accum <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+        a = oc.grad_accum
+
+        def split(x):
+            return jnp.moveaxis(
+                x.reshape((x.shape[0] // a, a) + x.shape[1:]), 1, 0)
+
+        micro = {k: split(v) for k, v in batch.items()}
+
+        def body(carry, mb):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss_of)(params, mb)
+            return (acc_loss + l,
+                    jax.tree.map(jnp.add, acc_g, g)), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), zero_g), micro)
+        inv = 1.0 / a
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt, batch):
+        loss, grads = grads_of(params, batch)
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = opt["step"]
+        lr = _schedule(step, oc)
+        b1c = 1.0 - oc.b1 ** (step.astype(jnp.float32) + 1.0)
+        b2c = 1.0 - oc.b2 ** (step.astype(jnp.float32) + 1.0)
+
+        mdtype = jnp.bfloat16 if oc.moment_dtype == "bfloat16" else jnp.float32
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = oc.b1 * m.astype(jnp.float32) + (1 - oc.b1) * g
+            v32 = oc.b2 * v.astype(jnp.float32) + (1 - oc.b2) * jnp.square(g)
+            mhat = m32 / b1c
+            vhat = v32 / b2c
+            delta = mhat / (jnp.sqrt(vhat) + oc.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + oc.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m32.astype(mdtype), v32.astype(mdtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(opt["m"])
+        flat_v = jax.tree.leaves(opt["v"])
+        new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        params2 = jax.tree.unflatten(tdef, [n[0] for n in new])
+        opt2 = {
+            "m": jax.tree.unflatten(tdef, [n[1] for n in new]),
+            "v": jax.tree.unflatten(tdef, [n[2] for n in new]),
+            "step": step + 1,
+        }
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return params2, opt2, metrics
+
+    return train_step

@@ -1,0 +1,94 @@
+"""Cache model tests: exact stack distances vs brute-force LRU oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cachesim import (CacheLevels, amat_cycles, miss_curve, mpka,
+                            property_trace, scaled_hierarchy, stack_distances,
+                            stack_distances_np, to_blocks)
+from repro.core import reorder
+from repro.graph import datasets
+
+traces = st.lists(st.integers(0, 30), min_size=1, max_size=500).map(
+    lambda xs: np.array(xs, dtype=np.int64))
+
+
+@settings(max_examples=80, deadline=None)
+@given(traces)
+def test_stack_distance_matches_lru_oracle(trace):
+    fast = stack_distances(trace)
+    brute = stack_distances_np(trace)
+    assert np.array_equal(np.minimum(fast, 2 ** 30),
+                          np.minimum(brute, 2 ** 30))
+
+
+@settings(max_examples=30, deadline=None)
+@given(traces, st.integers(1, 16))
+def test_miss_curve_monotone(trace, cap):
+    d = stack_distances(trace)
+    caps = np.arange(1, cap + 1)
+    m = miss_curve(d, caps)
+    assert np.all(np.diff(m) <= 0), "more capacity can't mean more misses"
+
+
+@settings(max_examples=30, deadline=None)
+@given(traces)
+def test_cold_misses_equal_distinct_blocks(trace):
+    d = stack_distances(trace)
+    n_cold = int((d >= 2 ** 30).sum())
+    assert n_cold == len(set(trace.tolist()))
+
+
+def test_streaming_trace_never_hits():
+    d = stack_distances(np.arange(1000))
+    lv = CacheLevels(8, 64, 512)
+    m = mpka(d, lv)
+    assert m["l3_mpka"] == 1000.0  # every access cold-misses
+
+
+def test_tight_loop_always_hits_after_warmup():
+    d = stack_distances(np.tile(np.arange(4), 100))
+    lv = CacheLevels(8, 64, 512)
+    m = mpka(d, lv)
+    assert m["l1_mpka"] == 1000.0 * 4 / 400  # only the 4 cold misses
+
+
+def test_amat_orders_hierarchies():
+    good = stack_distances(np.tile(np.arange(4), 50))
+    bad = stack_distances(np.arange(200))
+    lv = CacheLevels(8, 64, 512)
+    assert amat_cycles(good, lv) < amat_cycles(bad, lv)
+
+
+def test_pull_trace_is_in_indices():
+    g = datasets.load("lj", "test")
+    t = property_trace(g, "pull")
+    assert np.array_equal(t, g.in_csr.indices.astype(np.int64))
+
+
+def test_block_mapping():
+    t = np.array([0, 7, 8, 15, 16])
+    assert np.array_equal(to_blocks(t, bytes_per_vertex=8, block_bytes=64),
+                          [0, 0, 1, 1, 2])
+
+
+def test_fig3_signature_random_reordering_hurts_structured():
+    """Fig 3: random vertex reordering slows structured datasets; coarse
+    block-granularity reordering hurts much less."""
+    g = datasets.load("mp", "test")
+    lv = scaled_hierarchy(g.num_vertices)
+
+    def amat_of(technique, **kw):
+        if technique == "rcb":
+            res = reorder.random_cache_block(g.out_degrees(), **kw)
+            import repro.graph.csr as csr_mod
+            g2 = csr_mod.relabel(g, res.mapping)
+        else:
+            g2, _ = reorder.reorder_graph(g, technique)
+        return amat_cycles(stack_distances(to_blocks(property_trace(g2, "pull"))), lv)
+
+    base = amat_of("original")
+    rv = amat_of("random_vertex")
+    rcb4 = amat_of("rcb", n_blocks=4)
+    assert rv > base * 1.1, "RV must hurt a structured graph"
+    assert rcb4 < rv, "coarse-grain disruption must hurt less than fine-grain"

@@ -1,0 +1,95 @@
+"""Graph substrate tests: CSR invariants, generators, dataset signatures."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats
+from repro.graph import csr, datasets, generators
+
+
+@st.composite
+def edge_lists(draw):
+    n = draw(st.integers(min_value=2, max_value=60))
+    m = draw(st.integers(min_value=0, max_value=300))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    return n, np.array(src, np.int64), np.array(dst, np.int64)
+
+
+@settings(max_examples=50, deadline=None)
+@given(edge_lists())
+def test_csr_roundtrip(args):
+    n, src, dst = args
+    g = csr.from_edges(src, dst, n)
+    csr.validate(g)
+    s2, d2, _ = csr.to_edges(g)
+    assert sorted(zip(s2.tolist(), d2.tolist())) == sorted(
+        zip(src.tolist(), dst.tolist()))
+
+
+@settings(max_examples=30, deadline=None)
+@given(edge_lists())
+def test_in_out_degree_duality(args):
+    n, src, dst = args
+    g = csr.from_edges(src, dst, n)
+    assert np.array_equal(g.out_degrees(), np.bincount(src, minlength=n))
+    assert np.array_equal(g.in_degrees(), np.bincount(dst, minlength=n))
+
+
+def test_all_datasets_load_and_validate():
+    for key in datasets.REGISTRY:
+        g = datasets.load(key, "test")
+        csr.validate(g)
+        assert g.num_edges > 0
+
+
+def test_skewed_datasets_have_paper_signature():
+    """Table I envelope: hot minority covers a large edge majority."""
+    for key in ["kr", "pl", "tw", "sd", "wl", "mp"]:
+        g = datasets.load(key, "bench", seed=3)
+        s = stats.hot_vertex_stats(g)
+        assert 5 <= s["out_hot_vertex_pct"] <= 30, (key, s)
+        assert s["out_edge_coverage_pct"] >= 65, (key, s)
+
+
+def test_noskew_controls_lack_signature():
+    """Table X controls: uni/road must NOT show the power-law signature."""
+    for key in ["uni", "road"]:
+        g = datasets.load(key, "bench")
+        s = stats.hot_vertex_stats(g)
+        assert s["out_hot_vertex_pct"] > 30 or s["out_edge_coverage_pct"] < 65
+
+
+def test_hot_per_cache_block_range():
+    """Table II: 1.3-3.5 hot vertices per block on the paper's datasets."""
+    vals = []
+    for key in ["kr", "pl", "tw", "sd", "lj", "wl", "fr", "mp"]:
+        g = datasets.load(key, "bench", seed=3)
+        vals.append(stats.hot_per_cache_block(g))
+    assert min(vals) >= 1.0
+    assert max(vals) <= 4.5
+
+
+def test_structured_vs_unstructured_ids():
+    """Structured ordering puts community members at nearby ids."""
+    gs = generators.powerlaw_community(2000, 10, structured_ids=True, seed=0)
+    gu = generators.powerlaw_community(2000, 10, structured_ids=False, seed=0)
+
+    def mean_edge_span(g):
+        s, d, _ = csr.to_edges(g)
+        return float(np.mean(np.abs(s - d)))
+
+    assert mean_edge_span(gs) < 0.6 * mean_edge_span(gu)
+
+
+def test_degree_range_distribution_covers_all_hot():
+    g = datasets.load("sd", "test")
+    dist = stats.degree_range_distribution(g)
+    total = sum(v["vertex_pct"] for v in dist.values())
+    assert abs(total - 100.0) < 1e-6
+
+
+def test_weighted_graph():
+    g = datasets.load_weighted("lj", "test")
+    assert g.in_csr.weights is not None
+    assert np.all(g.in_csr.weights > 0)

@@ -1,0 +1,145 @@
+"""Property + unit tests for the DBG grouping framework (the paper's core)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reorder
+from repro.core.gorder_lite import gorder_lite
+from repro.graph import csr, datasets, generators
+
+degrees_arrays = st.lists(
+    st.integers(min_value=0, max_value=5000), min_size=1, max_size=400
+).map(lambda xs: np.array(xs, dtype=np.int64))
+
+
+def _is_permutation(mapping, n):
+    return sorted(mapping.tolist()) == list(range(n))
+
+
+@settings(max_examples=50, deadline=None)
+@given(degrees_arrays)
+def test_every_technique_is_a_permutation(degs):
+    n = degs.shape[0]
+    for name, fn in reorder.TECHNIQUES.items():
+        res = fn(degs)
+        assert _is_permutation(res.mapping, n), name
+
+
+@settings(max_examples=50, deadline=None)
+@given(degrees_arrays)
+def test_dbg_preserves_within_group_order(degs):
+    """Listing 1: stable binning — original relative order inside each group."""
+    res = reorder.dbg(degs)
+    spec = reorder.dbg_spec(max(1.0, degs.mean()))
+    groups = reorder._assign_groups(degs, spec.boundaries)
+    for k in range(spec.num_groups):
+        members = np.where(groups == k)[0]
+        new_pos = res.mapping[members]
+        assert np.all(np.diff(new_pos) > 0), f"group {k} order broken"
+
+
+@settings(max_examples=50, deadline=None)
+@given(degrees_arrays)
+def test_dbg_group_degree_monotonicity(degs):
+    """Earlier groups hold hotter vertices: min degree of group k >= max
+    boundary of group k+1."""
+    res = reorder.dbg(degs)
+    spec = reorder.dbg_spec(max(1.0, degs.mean()))
+    groups = reorder._assign_groups(degs, spec.boundaries)
+    order = np.argsort(res.mapping)  # new position -> original vertex
+    g_sorted = groups[order]
+    assert np.all(np.diff(g_sorted) >= 0), "groups not contiguous in new order"
+
+
+@settings(max_examples=30, deadline=None)
+@given(degrees_arrays)
+def test_sort_fully_sorted(degs):
+    res = reorder.sort_by_degree(degs)
+    order = np.argsort(res.mapping)
+    assert np.all(np.diff(degs[order]) <= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(degrees_arrays)
+def test_hubcluster_equals_two_group_dbg(degs):
+    """Table V: HubCluster == the grouping framework with 2 groups."""
+    a = max(1.0, degs.mean())
+    direct = reorder.hubcluster(degs)
+    via_framework = reorder.group_reorder(degs, reorder.hubcluster_spec(a))
+    assert np.array_equal(direct.mapping, via_framework.mapping)
+
+
+@settings(max_examples=30, deadline=None)
+@given(degrees_arrays)
+def test_sort_equals_unit_range_dbg(degs):
+    """Table V: Sort == per-unique-degree groups, stable."""
+    direct = reorder.sort_by_degree(degs)
+    m = int(degs.max(initial=0))
+    via = reorder.group_reorder(degs, reorder.sort_spec(m))
+    assert np.array_equal(direct.mapping, via.mapping)
+
+
+@settings(max_examples=30, deadline=None)
+@given(degrees_arrays)
+def test_hubsort_hot_sorted_cold_stable(degs):
+    res = reorder.hubsort(degs)
+    a = max(1.0, degs.mean())
+    hot = degs >= a
+    order = np.argsort(res.mapping)
+    n_hot = int(hot.sum())
+    hot_part = order[:n_hot]
+    cold_part = order[n_hot:]
+    assert np.all(np.diff(degs[hot_part]) <= 0), "hot not sorted"
+    assert np.all(np.diff(cold_part) > 0), "cold order not preserved"
+    assert set(hot_part.tolist()) == set(np.where(hot)[0].tolist())
+
+
+def test_random_cache_block_preserves_blocks():
+    degs = np.arange(64)
+    res = reorder.random_cache_block(degs, n_blocks=1, vertices_per_block=8)
+    # vertices of one block stay contiguous and in order
+    for b in range(8):
+        orig = np.arange(b * 8, (b + 1) * 8)
+        new = res.mapping[orig]
+        assert np.all(np.diff(new) == 1), "block interior reordered"
+
+
+def test_relabel_preserves_graph_isomorphism():
+    g = datasets.load("lj", "test")
+    g2, res = reorder.reorder_graph(g, "dbg")
+    csr.validate(g2)
+    # degree multiset preserved; per-vertex degree follows the mapping
+    assert np.array_equal(
+        g.out_degrees(), g2.out_degrees()[res.mapping])
+    assert np.array_equal(
+        g.in_degrees(), g2.in_degrees()[res.mapping])
+    # edge set preserved under relabel
+    s1, d1, _ = csr.to_edges(g)
+    s2, d2, _ = csr.to_edges(g2)
+    e1 = set(zip(res.mapping[s1].tolist(), res.mapping[d1].tolist()))
+    e2 = set(zip(s2.tolist(), d2.tolist()))
+    assert e1 == e2
+
+
+def test_gorder_lite_permutation():
+    g = datasets.load("wl", "test")
+    res = gorder_lite(g)
+    assert _is_permutation(res.mapping, g.num_vertices)
+
+
+def test_compose_mappings():
+    degs = np.random.default_rng(0).integers(0, 100, 200)
+    a = reorder.dbg(degs).mapping
+    b = reorder.random_vertex(degs).mapping
+    c = reorder.compose(a, b)
+    assert _is_permutation(c, 200)
+    assert np.array_equal(c, b[a])
+
+
+def test_dbg_paper_configuration_has_8_groups():
+    """The paper's §V-C config: 6 geometric hot ranges + 2 cold groups."""
+    spec = reorder.dbg_spec(20.0)  # sd dataset's average degree
+    assert spec.num_groups == 8
+    b = spec.boundaries
+    assert b[-1] == 0 and b[-2] == 10  # [0, A/2), [A/2, A)
+    assert b[0] == 640  # 32A
