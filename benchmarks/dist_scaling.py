@@ -1,0 +1,116 @@
+"""Sharded-PageRank scaling benchmark → BENCH_dist.json.
+
+Throughput of ``repro.dist.graph`` PageRank at 1/2/4/8 host devices, with and
+without DBG hot-vertex replication, on the ``kr`` (unstructured RMAT) and
+``lj`` (structured power-law) datasets — the device-level analogue of the
+paper's cache experiments: replication shrinks the cold-halo all_to_all the
+way DBG shrinks the hot working set.
+
+Usage:
+  PYTHONPATH=src python benchmarks/dist_scaling.py [--scale small]
+      [--datasets kr,lj] [--iters 20] [--reps 3] [--out BENCH_dist.json]
+"""
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DIST_DEVICES", "8"),
+)
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax
+import numpy as np
+
+from repro.apps import engine
+from repro.dist import graph as dist_graph
+from repro.graph import datasets
+
+POLICIES = ("replicate_hot", "partition")
+
+
+def bench_cell(ga, n_dev: int, policy: str, iters: int, reps: int):
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_dev]),
+                             (dist_graph.AXIS,))
+    sg = dist_graph.shard_graph(ga, n_dev, policy=policy)
+    # tol=-1 forces exactly `iters` iterations — stable work per rep
+    run = lambda: dist_graph.pagerank_sharded(sg, mesh, max_iters=iters,
+                                              tol=-1.0)
+    rank, _ = run()  # compile + warmup
+    rank.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        rank, it = run()
+    rank.block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    edges = ga.num_edges * iters
+    return {
+        "n_devices": n_dev,
+        "policy": policy,
+        "seconds_per_run": dt,
+        "edges_per_second": edges / dt,
+        "iters": iters,
+        **{k: sg.stats[k] for k in
+           ("n_hot", "hot_frac", "halo_slots", "halo_bytes_padded",
+            "edges_per_shard_max")},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="kr,lj")
+    ap.add_argument("--scale", default="small")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--devices", default="1,2,4,8")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_dist.json"))
+    args = ap.parse_args()
+
+    n_avail = len(jax.devices())
+    requested = [int(x) for x in args.devices.split(",")]
+    dev_counts = [x for x in requested if x <= n_avail]
+    if len(dev_counts) < len(requested):
+        print(f"[dist_scaling] only {n_avail} devices available; skipping "
+              f"{sorted(set(requested) - set(dev_counts))}", flush=True)
+    if not dev_counts:
+        raise SystemExit(
+            f"no runnable device counts in --devices {args.devices!r} "
+            f"({n_avail} host devices; set REPRO_DIST_DEVICES to raise)")
+    out = {"scale": args.scale, "iters": args.iters,
+           "platform": jax.devices()[0].platform, "cells": []}
+    for key in args.datasets.split(","):
+        g = datasets.load(key, args.scale, seed=3)
+        ga = engine.to_arrays(g)
+        print(f"[dist_scaling] {key}: V={g.num_vertices} E={g.num_edges}",
+              flush=True)
+        base = {}
+        for policy in POLICIES:
+            for n in dev_counts:
+                cell = bench_cell(ga, n, policy, args.iters, args.reps)
+                cell["dataset"] = key
+                if n == 1:
+                    base[policy] = cell["seconds_per_run"]
+                if policy in base:  # only meaningful vs a real 1-device run
+                    cell["speedup_vs_1dev"] = (base[policy]
+                                               / cell["seconds_per_run"])
+                out["cells"].append(cell)
+                print(f"[dist_scaling] {key} {policy} x{n}: "
+                      f"{cell['edges_per_second']/1e6:.1f} Me/s "
+                      f"(halo {cell['halo_slots']}, "
+                      f"hot {cell['hot_frac']:.1%})", flush=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[dist_scaling] wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

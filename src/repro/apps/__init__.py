@@ -3,6 +3,7 @@ from .bc import bc  # noqa: F401
 from .engine import GraphArrays, edge_map_pull, edge_map_push, to_arrays  # noqa: F401
 from .pagerank import pagerank  # noqa: F401
 from .pagerank_delta import pagerank_delta  # noqa: F401
+from .pagerank_dist import make_graph_mesh, pagerank_dist  # noqa: F401
 from .radii import radii  # noqa: F401
 from .sssp import sssp  # noqa: F401
 

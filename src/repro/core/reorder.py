@@ -219,8 +219,10 @@ def sort_by_degree(degrees: np.ndarray, seed: int = 0) -> ReorderResult:
     order = np.argsort(-degrees, kind="stable")
     mapping = np.empty_like(order)
     mapping[order] = np.arange(order.shape[0])
+    # Table V: Sort is one group per DISTINCT degree value actually present
+    n_groups = int(np.unique(degrees).shape[0])
     return ReorderResult(mapping.astype(np.int64), time.perf_counter() - t0, "sort",
-                         num_groups=int(degrees.max(initial=0)) + 1)
+                         num_groups=n_groups)
 
 
 def hubsort(degrees: np.ndarray, seed: int = 0) -> ReorderResult:

@@ -1,0 +1,17 @@
+"""repro.dist — the distribution subsystem.
+
+Four layers, one discipline (logical axes everywhere):
+
+* ``constrain``  — logical-axis activation sharding: ``constrain(x, *axes)``
+  annotates intermediates, ``activation_sharding`` scopes which mesh axes are
+  live; everything degrades to a no-op with no mesh (single-device tests).
+* ``sharding``   — parameter ``PartitionSpec`` derivation from the logical-axis
+  meta of ``lm.layers`` (FSDP on 'data', TP on 'model'), plus divisibility
+  enforcement and batch/cache specs.
+* ``pipeline``   — GPipe-style microbatched pipeline parallelism over a
+  ``"pipe"`` mesh axis (shard_map + ppermute).
+* ``graph``      — destination-sharded graph engine with the paper's DBG
+  insight lifted to the device level: hot degree-groups replicated, cold tail
+  owner-partitioned (halo exchange via all_to_all).
+"""
+from . import constrain, graph, pipeline, sharding  # noqa: F401

@@ -1,0 +1,371 @@
+"""Destination-sharded graph engine with DBG-aware hot-vertex replication.
+
+The paper segregates hot degree-groups from cold ones so the hot working set
+fits the fast memory level (DBG, Table V).  This module lifts that insight
+from the cache level to the DEVICE level: vertices in the hot degree-groups
+of ``core.reorder.dbg_spec`` get their property slices REPLICATED on every
+device (policy ``"replicate_hot"``); the cold tail is OWNER-PARTITIONED and
+exchanged on demand.
+
+Layout (built host-side by :func:`shard_graph`):
+
+* vertices are 1D-partitioned into ``n_shards`` contiguous blocks of
+  ``v_blk`` ids (destination ownership);
+* pull: each shard owns the in-edges of its destination block (globally
+  sorted by dst, so per-shard segments stay sorted);
+* push: each shard owns the out-edges of its source block.
+
+Pull-side communication is a HALO EXCHANGE: shard ``d`` needs ``prop[s]`` for
+every remote, non-hot source ``s`` of its local edges.  The exchange is a
+single ``jax.lax.all_to_all`` whose payload is exactly the halo — replicating
+the hot groups shrinks it dramatically on power-law graphs, because the few
+high-degree vertices account for most remote references (the same skew DBG
+exploits in cache).  Each device then gathers edge values from one
+concatenated table ``[local block | hot table | received halo]``.
+
+Push-side communication is the reduction: per-device partial destination
+vectors are combined with ``psum_scatter`` (sum) / ``pmin``/``pmax``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..apps.engine import GraphArrays
+from ..core import reorder
+
+__all__ = ["ShardedGraphArrays", "shard_graph", "edge_map_pull_sharded",
+           "edge_map_push_sharded", "pagerank_sharded"]
+
+AXIS = "graph"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedGraphArrays:
+    """Host-built sharded layout; leading dim of every (D, …) array is the
+    shard dim fed to ``shard_map`` with ``P("graph")``."""
+
+    n_shards: int
+    num_vertices: int
+    v_blk: int          # vertices per shard block (last block padded)
+    halo_max: int       # padded halo slots per (owner, dest) device pair
+    policy: str         # "replicate_hot" | "partition"
+    # pull side (destination-sharded in-edges)
+    in_slot: jnp.ndarray       # (D, E_blk) int32 — index into the value table
+    in_dst_local: jnp.ndarray  # (D, E_blk) int32 — dst - d*v_blk, sorted
+    in_w: jnp.ndarray          # (D, E_blk) float32
+    in_mask: jnp.ndarray       # (D, E_blk) bool — real edge vs pad
+    send_idx: jnp.ndarray      # (D, D, halo_max) int32 — owner-local sends
+    hot_ids: jnp.ndarray       # (H,) int32 — replicated vertex ids (global)
+    # push side (source-sharded out-edges)
+    out_src_local: jnp.ndarray  # (D, E_out_blk) int32
+    out_dst: jnp.ndarray        # (D, E_out_blk) int32 — global (padded space)
+    out_w: jnp.ndarray          # (D, E_out_blk) float32
+    out_mask: jnp.ndarray       # (D, E_out_blk) bool
+    # replicated degree vectors (apps need them)
+    in_deg: jnp.ndarray   # (V,) int32
+    out_deg: jnp.ndarray  # (V,) int32
+    stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def v_pad(self) -> int:
+        return self.n_shards * self.v_blk
+
+
+def _hot_mask(out_deg: np.ndarray, policy: str, num_hot_groups: int) -> np.ndarray:
+    """Vertices in the DBG hot degree-groups (everything at/above avg degree —
+    the groups the paper packs into the fast level)."""
+    if policy == "partition" or out_deg.size == 0:
+        return np.zeros(out_deg.shape[0], dtype=bool)
+    if policy != "replicate_hot":
+        raise ValueError(policy)
+    avg = max(1.0, float(out_deg.mean()))
+    spec = reorder.dbg_spec(avg, num_hot_groups=num_hot_groups)
+    groups = reorder._assign_groups(out_deg, spec.boundaries)
+    # hot = every group whose degree range sits at/above A; count via the
+    # boundary values (dbg_spec dedupes colliding boundaries on tiny A, so a
+    # fixed "all but the last 2" offset would miscount)
+    a_bound = max(1, int(np.ceil(avg)))
+    n_hot = sum(1 for b in spec.boundaries if b >= a_bound)
+    return groups < n_hot
+
+
+def _pad2d(rows, fill, dtype) -> np.ndarray:
+    width = max(1, max((len(r) for r in rows), default=1))
+    out = np.full((len(rows), width), fill, dtype=dtype)
+    for i, r in enumerate(rows):
+        out[i, : len(r)] = r
+    return out
+
+
+def shard_graph(ga: GraphArrays, n_shards: int, *, policy: str = "replicate_hot",
+                num_hot_groups: int = 6) -> ShardedGraphArrays:
+    """Partition ``GraphArrays`` for an ``n_shards``-device 1D mesh."""
+    v = int(ga.in_deg.shape[0])
+    d = int(n_shards)
+    v_blk = -(-v // d)
+    in_src = np.asarray(ga.in_src)
+    in_dst = np.asarray(ga.in_dst)
+    in_w = np.asarray(ga.in_w)
+    out_src = np.asarray(ga.out_src)
+    out_dst = np.asarray(ga.out_dst)
+    out_w = np.asarray(ga.out_w)
+    out_deg = np.asarray(ga.out_deg)
+
+    hot = _hot_mask(out_deg, policy, num_hot_groups)
+    hot_ids = np.nonzero(hot)[0].astype(np.int32)
+    hot_pos = np.full(v, -1, np.int64)
+    hot_pos[hot_ids] = np.arange(hot_ids.shape[0])
+    n_hot = int(hot_ids.shape[0])
+
+    owner_of = lambda ids: ids // v_blk
+
+    # ---- pull side: split in-edges by destination owner (dst-sorted) -------
+    edge_owner = owner_of(in_dst)
+    bounds = np.searchsorted(edge_owner, np.arange(d + 1))
+
+    # halo: per shard, the remote non-hot sources it reads, grouped by owner
+    need: list = []  # need[dst_shard][owner] = sorted unique global ids
+    for i in range(d):
+        srcs = in_src[bounds[i]:bounds[i + 1]]
+        remote = srcs[(owner_of(srcs) != i) & (hot_pos[srcs] < 0)]
+        uniq = np.unique(remote)
+        need.append([uniq[owner_of(uniq) == o] for o in range(d)])
+    halo_max = max(1, max((len(ids) for row in need for ids in row), default=1))
+
+    # sender view: send_idx[o, i] = owner-local indices o ships to shard i
+    send_idx = np.zeros((d, d, halo_max), np.int32)
+    halo_slots = 0
+    for o in range(d):
+        for i in range(d):
+            ids = need[i][o]
+            send_idx[o, i, : len(ids)] = (ids - o * v_blk).astype(np.int32)
+            halo_slots += len(ids)
+
+    # receiver view: edge slots into the [local | hot | halo] value table
+    slot_rows, dstl_rows, w_rows = [], [], []
+    for i in range(d):
+        sl = slice(bounds[i], bounds[i + 1])
+        srcs = in_src[sl]
+        slots = np.empty(srcs.shape[0], np.int64)
+        is_hot = hot_pos[srcs] >= 0
+        is_local = (owner_of(srcs) == i) & ~is_hot
+        is_remote = ~is_hot & ~is_local
+        slots[is_local] = srcs[is_local] - i * v_blk
+        slots[is_hot] = v_blk + hot_pos[srcs[is_hot]]
+        rem = srcs[is_remote]
+        ro = owner_of(rem)
+        pos = np.empty(rem.shape[0], np.int64)
+        for o in range(d):
+            m = ro == o
+            pos[m] = np.searchsorted(need[i][o], rem[m])
+        slots[is_remote] = v_blk + n_hot + ro * halo_max + pos
+        slot_rows.append(slots)
+        dstl_rows.append(in_dst[sl] - i * v_blk)
+        w_rows.append(in_w[sl])
+
+    in_slot = _pad2d(slot_rows, 0, np.int32)
+    in_dst_local = _pad2d(dstl_rows, v_blk - 1, np.int32)  # keeps sortedness
+    in_w_p = _pad2d(w_rows, 0.0, np.float32)
+    e_blk = in_slot.shape[1]
+    in_mask = np.zeros((d, e_blk), bool)
+    for i in range(d):
+        in_mask[i, : bounds[i + 1] - bounds[i]] = True
+
+    # ---- push side: split out-edges by source owner (src-sorted) -----------
+    pedge_owner = owner_of(out_src)
+    pbounds = np.searchsorted(pedge_owner, np.arange(d + 1))
+    srcl_rows, pdst_rows, pw_rows = [], [], []
+    for i in range(d):
+        sl = slice(pbounds[i], pbounds[i + 1])
+        srcl_rows.append(out_src[sl] - i * v_blk)
+        pdst_rows.append(out_dst[sl])
+        pw_rows.append(out_w[sl])
+    out_src_local = _pad2d(srcl_rows, 0, np.int32)
+    out_dst_p = _pad2d(pdst_rows, 0, np.int32)
+    out_w_p = _pad2d(pw_rows, 0.0, np.float32)
+    out_mask = np.zeros(out_src_local.shape, bool)
+    for i in range(d):
+        out_mask[i, : pbounds[i + 1] - pbounds[i]] = True
+
+    stats = {
+        "policy": policy,
+        "n_hot": n_hot,
+        "hot_frac": n_hot / max(1, v),
+        "halo_slots": int(halo_slots),
+        "halo_max": int(halo_max),
+        # bytes one pull moves device-to-device (f32 halo payload, padded)
+        "halo_bytes_padded": int(d * d * halo_max * 4),
+        "edges_per_shard_max": int(e_blk),
+    }
+    return ShardedGraphArrays(
+        n_shards=d, num_vertices=v, v_blk=v_blk, halo_max=halo_max,
+        policy=policy,
+        in_slot=jnp.asarray(in_slot), in_dst_local=jnp.asarray(in_dst_local),
+        in_w=jnp.asarray(in_w_p), in_mask=jnp.asarray(in_mask),
+        send_idx=jnp.asarray(send_idx), hot_ids=jnp.asarray(hot_ids),
+        out_src_local=jnp.asarray(out_src_local),
+        out_dst=jnp.asarray(out_dst_p), out_w=jnp.asarray(out_w_p),
+        out_mask=jnp.asarray(out_mask),
+        in_deg=jnp.asarray(ga.in_deg), out_deg=jnp.asarray(ga.out_deg),
+        stats=stats,
+    )
+
+
+_NEUTRAL = {"sum": 0.0, "min": np.inf, "max": -np.inf, "or": 0.0}
+
+
+def _pad_prop(sg: ShardedGraphArrays, prop: jnp.ndarray) -> jnp.ndarray:
+    return jnp.pad(prop, (0, sg.v_pad - sg.num_vertices))
+
+
+def edge_map_pull_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
+                          reduce: str = "sum", use_weights: bool = False,
+                          neutral: Optional[float] = None) -> jnp.ndarray:
+    """dst <- REDUCE over in-edges of f(prop[src]), sharded over ``mesh``.
+
+    Matches single-device :func:`repro.apps.engine.edge_map_pull` numerics.
+    ``prop``: (V,) global; returns (V,) global.  The only cross-device traffic
+    is the cold-halo all_to_all (+ the small hot-table gather).
+    """
+    if neutral is None:
+        neutral = _NEUTRAL[reduce]
+    v_blk = sg.v_blk
+    prop_blocks = _pad_prop(sg, prop).reshape(sg.n_shards, v_blk)
+    hot_tab = _pad_prop(sg, prop)[sg.hot_ids]  # replicated hot panel
+
+    def ranked(blocks, hot, send_idx, slot, dstl, w, mask):
+        local = blocks[0]
+        halo = local[send_idx[0]]                         # (D, halo_max)
+        if sg.n_shards > 1:
+            halo = jax.lax.all_to_all(halo, AXIS, split_axis=0, concat_axis=0)
+        table = jnp.concatenate([local, hot, halo.reshape(-1)])
+        vals = table[slot[0]]
+        if use_weights:
+            vals = vals + w[0]
+        vals = jnp.where(mask[0], vals, jnp.asarray(neutral, vals.dtype))
+        seg = dict(num_segments=v_blk, indices_are_sorted=True)
+        if reduce == "sum":
+            out = jax.ops.segment_sum(vals, dstl[0], **seg)
+        elif reduce == "min":
+            out = jax.ops.segment_min(vals, dstl[0], **seg)
+        elif reduce in ("max", "or"):
+            out = jax.ops.segment_max(vals, dstl[0], **seg)
+        else:
+            raise ValueError(reduce)
+        return out[None]
+
+    a = P(AXIS)
+    fn = shard_map(ranked, mesh=mesh,
+                   in_specs=(a, P(), a, a, a, a, a), out_specs=a,
+                   check_rep=False)
+    out = fn(prop_blocks, hot_tab, sg.send_idx, sg.in_slot, sg.in_dst_local,
+             sg.in_w, sg.in_mask)
+    return out.reshape(-1)[: sg.num_vertices]
+
+
+def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
+                          reduce: str = "sum", use_weights: bool = False,
+                          init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """dst <- REDUCE over pushes from sources, sharded over ``mesh``.
+
+    Sources read their owner-local property block (no input communication);
+    the cross-device reduction of partial destination vectors is the
+    collective (``psum_scatter`` for sum, ``pmin``/``pmax`` otherwise).
+    """
+    v_blk = sg.v_blk
+    v_pad = sg.v_pad
+    prop_blocks = _pad_prop(sg, prop).reshape(sg.n_shards, v_blk)
+    fill = _NEUTRAL[reduce]
+
+    def ranked(blocks, srcl, dst, w, mask):
+        local = blocks[0]
+        vals = local[srcl[0]]
+        if use_weights:
+            vals = vals + w[0]
+        vals = jnp.where(mask[0], vals, jnp.asarray(fill, vals.dtype))
+        partial = jnp.full((v_pad,), fill, vals.dtype)
+        if reduce == "sum":
+            partial = partial.at[dst[0]].add(vals)
+            if sg.n_shards > 1:
+                mine = jax.lax.psum_scatter(partial, AXIS,
+                                            scatter_dimension=0, tiled=True)
+            else:
+                mine = partial
+        else:
+            upd = (partial.at[dst[0]].min if reduce == "min"
+                   else partial.at[dst[0]].max)
+            partial = upd(vals)
+            if sg.n_shards > 1:
+                partial = (jax.lax.pmin if reduce == "min"
+                           else jax.lax.pmax)(partial, AXIS)
+            i = jax.lax.axis_index(AXIS)
+            mine = jax.lax.dynamic_slice_in_dim(partial, i * v_blk, v_blk)
+        return mine[None]
+
+    a = P(AXIS)
+    fn = shard_map(ranked, mesh=mesh, in_specs=(a, a, a, a, a), out_specs=a,
+                   check_rep=False)
+    out = fn(prop_blocks, sg.out_src_local, sg.out_dst, sg.out_w, sg.out_mask)
+    out = out.reshape(-1)[: sg.num_vertices]
+    if init is not None:
+        if reduce == "sum":
+            out = init + out
+        elif reduce == "min":
+            out = jnp.minimum(init, out)
+        else:
+            out = jnp.maximum(init, out)
+    return out.astype(prop.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sharded PageRank (the apps/ wiring target; benchmarked by dist_scaling)
+# ---------------------------------------------------------------------------
+
+_PR_CACHE: Dict[Tuple[Any, ...], Any] = {}
+_PR_CACHE_MAX = 32
+
+
+def pagerank_sharded(sg: ShardedGraphArrays, mesh, *, damping: float = 0.85,
+                     max_iters: int = 64, tol: float = 1e-7):
+    """Sharded PageRank matching :func:`repro.apps.pagerank.pagerank`.
+
+    Compiles once per (graph, mesh, hyperparams) — repeat calls (benchmark
+    iterations) reuse the cached executable.  The cache is identity-keyed and
+    bounded: oldest entries (which pin their graph's device arrays) are
+    evicted past ``_PR_CACHE_MAX`` distinct configurations.
+    """
+    key = (id(sg), id(mesh), sg.policy, damping, max_iters, tol)
+    if key not in _PR_CACHE:
+        while len(_PR_CACHE) >= _PR_CACHE_MAX:
+            _PR_CACHE.pop(next(iter(_PR_CACHE)))
+        v = sg.num_vertices
+        out_deg = jnp.maximum(1, sg.out_deg).astype(jnp.float32)
+        dangling = (sg.out_deg == 0).astype(jnp.float32)
+
+        def run():
+            def cond(state):
+                _, it, err = state
+                return jnp.logical_and(it < max_iters, err > tol)
+
+            def body(state):
+                rank, it, _ = state
+                contrib = rank / out_deg
+                pulled = edge_map_pull_sharded(sg, contrib, mesh)
+                dangling_mass = jnp.sum(rank * dangling) / v
+                new = (1.0 - damping) / v + damping * (pulled + dangling_mass)
+                err = jnp.sum(jnp.abs(new - rank))
+                return new, it + 1, err
+
+            rank0 = jnp.full((v,), 1.0 / v, jnp.float32)
+            return jax.lax.while_loop(cond, body, (rank0, 0, jnp.inf))
+
+        _PR_CACHE[key] = jax.jit(run)
+    rank, iters, _ = _PR_CACHE[key]()
+    return rank, iters

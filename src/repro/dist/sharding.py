@@ -1,0 +1,215 @@
+"""Parameter PartitionSpec derivation from lm.layers' logical-axis meta.
+
+Every ``*_init`` in ``lm.layers`` / ``lm.moe`` / ``lm.ssm`` / ``lm.embed``
+declares logical axes per weight leaf (``("embed", "heads")`` …).  The model
+builder stacks periods and drops the meta, so this module re-derives the
+logical axes from the leaf's *path* (the param tree uses a fixed, flat naming
+discipline) and translates them to mesh axes:
+
+  FSDP:  ``embed``/``embed_fsdp``          → ``data`` (and ``pod`` when
+         ``fsdp_over_pods``) — ZeRO-3 falls out of GSPMD
+  TP:    ``heads``/``kv_heads``/``ff``/``vocab``/``experts`` → ``model``
+
+Leading stacking dims (``jax.vmap`` over periods / encoder layers) are
+replicated.  ``enforce_divisibility`` then drops, per-dimension, any mesh
+axes that do not evenly divide the dimension on the target mesh — so one rule
+table serves every arch at every reduced/full size.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_specs", "cache_specs", "batch_spec", "enforce_divisibility",
+           "logical_axes"]
+
+Logical = Tuple[Optional[str], ...]
+
+# path-suffix -> logical axes for the trailing dims of the leaf.
+# Keys are (parent, leaf) pairs; single-name keys match the leaf name alone.
+_RULES: Dict[Tuple[str, ...], Logical] = {
+    # embedding (lm.embed meta, incl. the DBG hot/cold vocab split)
+    ("embed", "hot"): (None, "embed_fsdp"),
+    ("embed", "cold"): ("vocab", None),
+    ("embed", "table"): ("vocab", None),
+    ("embed", "unembed"): (None, "vocab"),
+    # attention / MLA
+    ("q", "w"): ("embed", "heads"),
+    ("k", "w"): ("embed", "kv_heads"),
+    ("v", "w"): ("embed", "kv_heads"),
+    ("o", "w"): ("heads", "embed"),
+    ("kv_down", "w"): ("embed", None),
+    ("k_rope", "w"): ("embed", None),
+    ("k_up", "w"): (None, "heads"),
+    ("v_up", "w"): (None, "heads"),
+    # dense MLP (also MoE shared experts)
+    ("up", "w"): ("embed", "ff"),
+    ("gate", "w"): ("embed", "ff"),
+    ("down", "w"): ("ff", "embed"),
+    # MoE routed experts: stacked raw arrays, no {"w": ...} wrapper
+    ("chan", "gate"): ("experts", "embed", "ff"),
+    ("chan", "up"): ("experts", "embed", "ff"),
+    ("chan", "down"): ("experts", "ff", "embed"),
+    ("router", "w"): ("embed", None),
+    # SSD / RG-LRU mixers
+    ("in_proj", "w"): ("embed", "ff"),
+    ("out_proj", "w"): ("ff", "embed"),
+    ("in_x", "w"): ("embed", "ff"),
+    ("in_gate", "w"): ("embed", "ff"),
+    ("rg_w", "w"): ("ff", "ff"),
+    ("ig_w", "w"): ("ff", "ff"),
+    ("out", "w"): ("ff", "embed"),
+    ("conv_w",): (None, "ff"),
+    ("A_log",): ("heads",),
+    ("D",): ("heads",),
+    ("dt_bias",): ("heads",),
+    ("lam",): ("ff",),
+    # norms / misc
+    ("scale",): ("embed",),
+    ("prefix_proj", "w"): ("embed", "embed"),
+}
+
+_TP_AXES = ("heads", "kv_heads", "ff", "vocab", "experts")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        # SequenceKeys (period tuples) and vmap stacking carry no name
+    return tuple(names)
+
+
+def _logical_for(path, ndim: int) -> Logical:
+    names = _path_names(path)
+    rule: Optional[Logical] = None
+    for span in (2, 1):
+        if len(names) >= span and names[-span:] in _RULES:
+            rule = _RULES[names[-span:]]
+            break
+    if rule is None or ndim < len(rule):
+        return (None,) * ndim
+    # leading stacking dims (scan-over-periods / encoder vmap) stay replicated
+    return (None,) * (ndim - len(rule)) + rule
+
+
+def logical_axes(params) -> Any:
+    """Tree of logical-axis tuples matching ``params``' structure."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a: _logical_for(p, getattr(a, "ndim", 0)), params)
+
+
+def _to_mesh_axes(logical: Logical, fsdp_over_pods: bool) -> P:
+    fsdp = ("pod", "data") if fsdp_over_pods else ("data",)
+    entries = []
+    used: set = set()
+    for name in logical:
+        if name in ("embed", "embed_fsdp"):
+            axes = tuple(a for a in fsdp if a not in used)
+        elif name in _TP_AXES:
+            axes = ("model",) if "model" not in used else ()
+        else:
+            axes = ()
+        if not axes:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    return P(*entries)
+
+
+def param_specs(params, fsdp_over_pods: bool = False):
+    """PartitionSpec tree for a param (or param-shape) tree.
+
+    FSDP on 'data' (optionally folded over 'pod'), TP on 'model'.  Pair with
+    :func:`enforce_divisibility` before building ``NamedSharding``s — specs
+    here are mesh-agnostic and may over-shard small reduced configs.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a: _to_mesh_axes(_logical_for(p, getattr(a, "ndim", 0)),
+                                   fsdp_over_pods),
+        params)
+
+
+def batch_spec(mesh) -> Tuple[Any, ...]:
+    """Leading-dim entry for batch-sharded inputs: ``P(*batch_spec(mesh), …)``.
+
+    Returns a 1-tuple whose element may itself be a tuple of mesh axes
+    (('pod', 'data') on multi-pod meshes), so the batch dim folds over every
+    data-parallel axis.
+    """
+    names = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if not names:
+        return (None,)
+    return (names[0] if len(names) == 1 else tuple(names),)
+
+
+def cache_specs(cache, mesh):
+    """Decode-cache specs: batch dim over the data axes, everything else
+    replicated.  Period-stacked leaves (under ``periods``) carry a leading
+    stacking dim; ``len`` is a replicated scalar."""
+    (bentry,) = batch_spec(mesh)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim == 0 or not names:
+            return P()
+        batch_dim = 1 if names[0] == "periods" else 0
+        if ndim <= batch_dim:
+            return P()
+        entries = [None] * ndim
+        entries[batch_dim] = bentry
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def _axes_tuple(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def _enforce_one(shape: Tuple[int, ...], spec: P, mesh_shape: Dict[str, int]) -> P:
+    entries = []
+    used: set = set()
+    for i, entry in enumerate(spec):
+        axes = tuple(a for a in _axes_tuple(entry)
+                     if a in mesh_shape and a not in used)
+        prod = 1
+        for a in axes:
+            prod *= int(mesh_shape[a])
+        if not axes or prod <= 1 or i >= len(shape) or shape[i] % prod != 0:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    return P(*entries)
+
+
+def enforce_divisibility(shapes, specs, mesh):
+    """Drop (per-dimension) mesh axes that don't evenly divide the dim.
+
+    ``shapes``: a tree of arrays / ShapeDtypeStructs (or a single one);
+    ``specs``: matching tree of PartitionSpecs (or a single one).  Axes absent
+    from ``mesh`` and duplicate axis uses within one spec are dropped too.
+    """
+    mesh_shape = dict(mesh.shape)
+
+    def is_shape_leaf(x):
+        return hasattr(x, "shape") and hasattr(x, "ndim")
+
+    if is_shape_leaf(shapes) and isinstance(specs, P):
+        return _enforce_one(tuple(shapes.shape), specs, mesh_shape)
+    flat_shapes = jax.tree.leaves(shapes, is_leaf=is_shape_leaf)
+    flat_specs, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    out = [_enforce_one(tuple(sh.shape), sp, mesh_shape)
+           for sh, sp in zip(flat_shapes, flat_specs)]
+    return jax.tree.unflatten(treedef, out)

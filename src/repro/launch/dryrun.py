@@ -160,6 +160,8 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh,
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [per-device dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = roofline.parse_collective_bytes(hlo)
     parsed = roofline.parse_hlo_costs(hlo)  # trip-count-aware (see §Roofline)

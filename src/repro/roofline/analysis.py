@@ -152,7 +152,11 @@ _ZERO_COST_RE = re.compile(
     r"=\s*\S+\s+(bitcast|tuple|get-tuple-element|parameter|constant|"
     r"partition-id|replica-id|after-all|reshape)\(")
 _SIG_PARAM_RE = re.compile(r"(%[\w\.\-]+):\s*(\S+?)(?:[,)]|$)")
-_DOT_CALL_RE = re.compile(r"\bdot\(\s*(%[\w\.\-]+)")
+# operand may be `%name` (older HLO text) or `f32[64,128]{1,0} %name`
+# (newer XLA prints operand types inline in call sites)
+_DOT_CALL_RE = re.compile(
+    r"\bdot\(\s*(?:(?P<type>[a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?)\s+)?"
+    r"(?P<name>%[\w\.\-]+)")
 _LC_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
@@ -213,7 +217,7 @@ def parse_hlo_costs(hlo: str) -> Dict[str, float]:
             if out_dims[0][1]:
                 for d in out_dims[0][1].split(","):
                     out_n *= int(d)
-            lhs_type = sym.get(call.group(1), "")
+            lhs_type = call.group("type") or sym.get(call.group("name"), "")
             lhs_dims_m = _SHAPE_RE.findall(lhs_type)
             k = 1
             if lhs_dims_m and lc.group(1):

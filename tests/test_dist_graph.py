@@ -1,0 +1,81 @@
+"""DBG-aware sharded graph engine (8 host devices via subprocess):
+edge_map_pull/push parity with the single-device engine for both replication
+policies, sharded PageRank == single-device PageRank on kr, and the paper's
+claim lifted to the device level — replicating the hot degree-groups shrinks
+the cold-halo exchange."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.graph import datasets
+from repro.apps import engine
+from repro.dist import graph as dg
+g = datasets.load("kr", "test")
+ga = engine.to_arrays(g)
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("graph",))
+prop = jnp.asarray(
+    np.random.default_rng(0).normal(size=g.num_vertices).astype(np.float32))
+"""
+
+
+def _run(code: str) -> str:
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + code],
+                       capture_output=True, text=True, cwd=ROOT, timeout=900)
+    assert "OK" in r.stdout, f"stdout={r.stdout[-2000:]}\nstderr={r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_edge_maps_match_engine_both_policies():
+    _run("""
+ref_pull = engine.edge_map_pull(ga, prop, reduce="sum")
+ref_push = engine.edge_map_push(ga, prop, reduce="sum")
+ref_min = engine.edge_map_pull(ga, prop, reduce="min")
+for policy in ("replicate_hot", "partition"):
+    sg = dg.shard_graph(ga, 8, policy=policy)
+    np.testing.assert_allclose(
+        np.asarray(dg.edge_map_pull_sharded(sg, prop, mesh)),
+        np.asarray(ref_pull), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(dg.edge_map_push_sharded(sg, prop, mesh)),
+        np.asarray(ref_push), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(dg.edge_map_pull_sharded(sg, prop, mesh, reduce="min")),
+        np.asarray(ref_min), rtol=1e-5)
+print("OK")
+""")
+
+
+def test_sharded_pagerank_matches_single_device():
+    _run("""
+from repro.apps.pagerank import pagerank
+from repro.apps.pagerank_dist import pagerank_dist
+ref, ref_iters = pagerank(ga, max_iters=50)
+for policy in ("replicate_hot", "partition"):
+    ranks, iters, sg = pagerank_dist(g, mesh=mesh, policy=policy, max_iters=50)
+    assert int(iters) == int(ref_iters)
+    np.testing.assert_allclose(np.asarray(ranks), np.asarray(ref),
+                               rtol=1e-5, atol=1e-9)
+print("OK")
+""")
+
+
+def test_hot_replication_shrinks_halo():
+    """The tentpole claim: DBG hot groups account for most remote references
+    on a skewed graph, so replicating them cuts the halo exchange."""
+    _run("""
+rep = dg.shard_graph(ga, 8, policy="replicate_hot")
+part = dg.shard_graph(ga, 8, policy="partition")
+assert rep.stats["n_hot"] > 0
+assert rep.stats["halo_slots"] < 0.7 * part.stats["halo_slots"], (
+    rep.stats, part.stats)
+# replication must stay bounded: the hot set is the DBG head, not the graph
+assert rep.stats["hot_frac"] < 0.5
+print("OK")
+""")

@@ -136,6 +136,60 @@ def test_compose_mappings():
     assert np.array_equal(c, b[a])
 
 
+@settings(max_examples=30, deadline=None)
+@given(degrees_arrays)
+def test_compose_is_bijection_and_sequential_application(degs):
+    """compose(a, b) is a permutation and equals applying a then b — checked
+    both pointwise and end-to-end through CSR relabeling."""
+    n = degs.shape[0]
+    a = reorder.dbg(degs).mapping
+    b = reorder.random_vertex(degs, seed=3).mapping
+    c = reorder.compose(a, b)
+    assert _is_permutation(c, n)
+    for v in range(min(n, 32)):
+        assert c[v] == b[a[v]]
+
+
+def test_compose_equals_sequential_relabel():
+    g = datasets.load("lj", "test")
+    a = reorder.dbg(g.out_degrees()).mapping
+    b = reorder.sort_by_degree(
+        csr.relabel(g, a).out_degrees()).mapping
+    step_wise = csr.relabel(csr.relabel(g, a), b)
+    fused = csr.relabel(g, reorder.compose(a, b))
+    s1, d1, _ = csr.to_edges(step_wise)
+    s2, d2, _ = csr.to_edges(fused)
+    assert set(zip(s1.tolist(), d1.tolist())) == set(zip(s2.tolist(), d2.tolist()))
+
+
+@pytest.mark.parametrize("n", [7, 9, 15, 17, 63, 65, 100])
+@pytest.mark.parametrize("n_blocks", [1, 2, 4])
+def test_random_cache_block_ragged_tail_is_permutation(n, n_blocks):
+    """RCB with n % span != 0: the ragged tail chunk must still land in a
+    contiguous slot and the mapping must stay a permutation."""
+    span = n_blocks * 8
+    if n % span == 0:
+        pytest.skip("not a ragged case")
+    degs = np.zeros(n, np.int64)
+    res = reorder.random_cache_block(degs, n_blocks=n_blocks,
+                                     vertices_per_block=8, seed=5)
+    assert _is_permutation(res.mapping, n)
+    # interior order of every chunk (incl. the short tail) is preserved
+    num_chunks = -(-n // span)
+    for c in range(num_chunks):
+        orig = np.arange(c * span, min((c + 1) * span, n))
+        new = res.mapping[orig]
+        assert np.all(np.diff(new) == 1), f"chunk {c} torn apart"
+
+
+@settings(max_examples=30, deadline=None)
+@given(degrees_arrays)
+def test_sort_num_groups_counts_distinct_degrees(degs):
+    """Table V: Sort has one group per unique degree value present."""
+    res = reorder.sort_by_degree(degs)
+    assert res.num_groups == len(set(degs.tolist()))
+
+
 def test_dbg_paper_configuration_has_8_groups():
     """The paper's §V-C config: 6 geometric hot ranges + 2 cold groups."""
     spec = reorder.dbg_spec(20.0)  # sd dataset's average degree
