@@ -1,0 +1,201 @@
+"""Streaming-churn benchmark → BENCH_stream.json.
+
+The streaming analogue of the paper's Figure 9 structure-vs-footprint
+tension: as update batches land, how fast does ingest run, how long do
+queries take, what does keeping the DBG layout current cost online, and how
+much locality does it retain vs. letting the layout rot?
+
+For each (dataset, batch size, layout policy) cell:
+
+  * ingest throughput (edges/s) over a preferential-attachment update stream
+    (insert/delete mix; skew-preserving endpoint sampling),
+  * incremental-PageRank query latency after every batch,
+  * incremental regroup cost per batch vs. a full batch DBG reorder of the
+    final graph (the ISSUE 2 acceptance ratio),
+  * final-layout quality: L2/L3 MPKA of the final graph under the
+    incrementally-maintained mapping vs. a fresh batch DBG mapping vs.
+    identity.
+
+Usage:
+  PYTHONPATH=src python benchmarks/stream_churn.py [--scale small]
+      [--datasets kr,uni] [--batch-sizes 256,1024,4096] [--batches 10]
+      [--out BENCH_stream.json] [--smoke]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+from repro.cachesim import mpka, property_trace, scaled_hierarchy, \
+    stack_distances, to_blocks
+from repro.core import reorder
+from repro.graph import csr as csr_mod
+from repro.graph import datasets
+from repro.stream import StreamConfig, StreamService
+
+POLICIES = ("identity", "incremental_dbg")
+_MAX_TRACE = 1_500_000
+
+
+class ChurnStream:
+    """Skew-preserving update stream: preferential endpoints for inserts,
+    uniform eviction over current edges for deletes."""
+
+    def __init__(self, g, insert_frac: float = 0.75, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.insert_frac = insert_frac
+        out_p = (g.out_degrees() + 1.0)
+        in_p = (g.in_degrees() + 1.0)
+        self._out_cum = np.cumsum(out_p / out_p.sum())
+        self._in_cum = np.cumsum(in_p / in_p.sum())
+
+    def _pick(self, cum, k):
+        # clip: float rounding can leave cum[-1] a hair under 1.0
+        idx = np.searchsorted(cum, self.rng.random(k))
+        return np.minimum(idx, cum.shape[0] - 1).astype(np.int64)
+
+    def next_batch(self, dg, batch_size: int):
+        n_add = int(round(batch_size * self.insert_frac))
+        n_del = batch_size - n_add
+        add_src = self._pick(self._out_cum, n_add)
+        add_dst = self._pick(self._in_cum, n_add)
+        es, ed, _ = dg.alive_edges()
+        idx = self.rng.choice(es.shape[0], size=min(n_del, es.shape[0]),
+                              replace=False)
+        return add_src, add_dst, es[idx], ed[idx]
+
+
+def layout_quality(g, mapping, levels, mode="pull"):
+    g2 = g if mapping is None else csr_mod.relabel(g, mapping)
+    tr = to_blocks(property_trace(g2, mode, max_len=_MAX_TRACE))
+    return mpka(stack_distances(tr), levels)
+
+
+def bench_cell(key: str, scale: str, policy: str, batch_size: int,
+               num_batches: int, seed: int = 3, shared_final=None):
+    g = datasets.load(key, scale, seed=seed)
+    cfg = StreamConfig(
+        regroup_every=1 if policy == "incremental_dbg" else 0)
+
+    # Two identical passes over the same deterministic stream: the first is a
+    # throwaway that absorbs every jit compilation (the delta-buffer pad size
+    # grows with applied batches, so warming up only the initial shape is not
+    # enough), the second is timed.  Without this, whichever POLICY ran first
+    # in the process would absorb all compiles and the policy-vs-policy
+    # latency comparison would be a run-order artifact.
+    for warmup in (True, False):
+        svc = StreamService(g, cfg)
+        stream = ChurnStream(g, seed=seed)
+        svc.pagerank()  # initial full solve
+        ingest_s, query_s, regroup_s, moved, pr_iters = [], [], [], [], []
+        edges_applied = 0
+        for _ in range(num_batches):
+            a_s, a_d, d_s, d_d = stream.next_batch(svc.dg, batch_size)
+            st = svc.ingest(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+            t0 = time.perf_counter()
+            svc.pagerank()
+            query_s.append(time.perf_counter() - t0)
+            ingest_s.append(st.total_seconds)
+            regroup_s.append(st.regroup_seconds)
+            moved.append(st.moved_vertices)
+            pr_iters.append(svc.pr.last_iters)
+            edges_applied += st.inserted + st.deleted
+
+    # Final-graph metrics are identical across policies (the stream is
+    # deterministic and regrouping never mutates the graph), so compute the
+    # expensive full-DBG reorder + stack-distance simulations once per
+    # (dataset, batch_size) and share them between the policy cells.
+    cache_key = (key, batch_size)
+    if shared_final is not None and cache_key in shared_final:
+        final, levels, full_dbg, full_relabel_s, mpka_id, mpka_full = \
+            shared_final[cache_key]
+    else:
+        final = svc.snapshot()
+        levels = scaled_hierarchy(final.num_vertices)
+        full_dbg = reorder.dbg(final.out_degrees())
+        t0 = time.perf_counter()
+        csr_mod.relabel(final, full_dbg.mapping)
+        full_relabel_s = time.perf_counter() - t0
+        mpka_id = layout_quality(final, None, levels)
+        mpka_full = layout_quality(final, full_dbg.mapping, levels)
+        if shared_final is not None:
+            shared_final[cache_key] = (final, levels, full_dbg,
+                                       full_relabel_s, mpka_id, mpka_full)
+
+    cell = {
+        "dataset": key,
+        "policy": policy,
+        "batch_size": batch_size,
+        "num_batches": num_batches,
+        "final_vertices": final.num_vertices,
+        "final_edges": final.num_edges,
+        "ingest_edges_per_second": edges_applied / max(1e-12, sum(ingest_s)),
+        "ingest_seconds_per_batch": float(np.mean(ingest_s)),
+        "query_latency_mean_s": float(np.mean(query_s)),
+        "query_latency_median_s": float(np.median(query_s)),
+        "pr_push_iters_mean": float(np.mean(pr_iters)),
+        "compactions": svc.compactions,
+        "regroup_seconds_per_batch": float(np.mean(regroup_s)),
+        "moved_vertices_per_batch": float(np.mean(moved)),
+        "full_dbg_mapping_seconds": full_dbg.seconds,
+        "full_dbg_relabel_seconds": full_relabel_s,
+        "mpka_identity": mpka_id,
+        "mpka_full_dbg": mpka_full,
+    }
+    if policy == "incremental_dbg":
+        cell["mpka_incremental"] = layout_quality(
+            final, svc.current_mapping(), levels)
+        cell["regroup_vs_full_dbg_cost_ratio"] = (
+            cell["regroup_seconds_per_batch"]
+            / max(1e-12, full_dbg.seconds + full_relabel_s))
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="kr,uni")
+    ap.add_argument("--scale", default="small")
+    ap.add_argument("--batch-sizes", default="256,1024,4096")
+    ap.add_argument("--batches", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: test scale, 2 batches, 1 size")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_stream.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.scale, args.batches, args.batch_sizes = "test", 2, "64"
+
+    batch_sizes = [int(x) for x in args.batch_sizes.split(",")]
+    out = {"scale": args.scale, "batches": args.batches, "cells": []}
+    shared_final: dict = {}
+    for key in args.datasets.split(","):
+        for batch_size in batch_sizes:
+            for policy in POLICIES:
+                cell = bench_cell(key, args.scale, policy, batch_size,
+                                  args.batches, shared_final=shared_final)
+                out["cells"].append(cell)
+                msg = (f"[stream_churn] {key} {policy} b={batch_size}: "
+                       f"{cell['ingest_edges_per_second']/1e3:.1f} Ke/s "
+                       f"query {cell['query_latency_median_s']*1e3:.1f} ms")
+                if policy == "incremental_dbg":
+                    msg += (f" regroup {cell['regroup_seconds_per_batch']*1e3:.2f}"
+                            f" ms/batch (full dbg "
+                            f"{(cell['full_dbg_mapping_seconds'] + cell['full_dbg_relabel_seconds'])*1e3:.1f} ms), "
+                            f"L3 mpka inc {cell['mpka_incremental']['l3_mpka']:.1f}"
+                            f" vs full {cell['mpka_full_dbg']['l3_mpka']:.1f}"
+                            f" vs none {cell['mpka_identity']['l3_mpka']:.1f}")
+                print(msg, flush=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[stream_churn] wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""repro.stream — dynamic-graph ingestion with incremental DBG maintenance.
+
+The paper's central insight — coarse degree grouping concentrates hot
+vertices while rarely moving any single vertex — is what makes *online*
+reordering tractable: a vertex relocates only when its degree crosses a group
+boundary.  This subsystem turns the snapshot-analytics repo into a long-lived
+service around that observation:
+
+* ``delta``       — ``DeltaGraph``: batched insert/delete over the frozen CSR
+  (delta buffers + tombstones, O(batch) apply, threshold compaction);
+* ``regroup``     — ``IncrementalDBG``: the paper's degree groups maintained
+  online with hysteresis, emitting ``RemapDelta``s;
+* ``incremental`` — delta-based PageRank (exact residual carry + forward
+  push) and SSSP (insertion relaxation, deletion fallback) refresh;
+* ``service``     — the ingest-and-query loop with regroup/compact policies
+  and the cachesim locality-decay hook.
+"""
+from . import delta, incremental, regroup, service  # noqa: F401
+from .delta import ApplyResult, DeltaGraph  # noqa: F401
+from .incremental import (  # noqa: F401
+    IncrementalPageRank,
+    IncrementalSSSP,
+    StreamArrays,
+    edge_map_pull_stream,
+    edge_map_push_stream,
+    stream_arrays,
+)
+from .regroup import IncrementalDBG, RemapDelta  # noqa: F401
+from .service import IngestStats, StreamConfig, StreamService  # noqa: F401

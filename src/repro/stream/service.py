@@ -1,0 +1,160 @@
+"""The ingest-and-query loop: apply batch → maybe regroup → maybe compact →
+answer queries.
+
+``StreamService`` is the subsystem's front door, wired the way ``serve``
+batches LM requests: updates arrive in batches, queries are answered from
+incrementally-maintained state, and two background-style maintenance actions
+amortize cost over the stream:
+
+  * **regroup** — ``IncrementalDBG`` keeps the paper's degree groups current
+    (every ``regroup_every`` batches), emitting ``RemapDelta``s and a live
+    DBG mapping for the layout-sensitive consumers (cachesim, ``repro.dist``);
+  * **compact** — when churn crosses ``compact_threshold`` of the base size,
+    the delta layers fold back into a flat CSR and the incremental PageRank
+    residual is resynced (shedding accumulated float32 noise).
+
+``locality()`` is the cachesim hook: MPKA of the *current* graph under the
+original ids vs. under the incrementally-maintained DBG mapping — the
+streaming analogue of the paper's Fig 9 structure-vs-footprint tension
+(how fast does locality decay as updates pile up, and how much of it does
+cheap online regrouping claw back).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..cachesim import mpka, property_trace, scaled_hierarchy, stack_distances, to_blocks
+from ..graph import csr
+from .delta import ApplyResult, DeltaGraph
+from .incremental import IncrementalPageRank, IncrementalSSSP
+from .regroup import IncrementalDBG, RemapDelta
+
+__all__ = ["StreamConfig", "StreamService", "IngestStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    compact_threshold: float = 0.25
+    regroup_every: int = 1  # batches between regroup passes; 0 = never
+    hysteresis: float = 0.25
+    spec_drift_tol: float = 0.2
+    damping: float = 0.85
+    pr_epsilon: float = 1e-9
+    pr_max_iters: int = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestStats:
+    batch_index: int
+    inserted: int
+    deleted: int
+    apply_seconds: float
+    regroup_seconds: float
+    moved_vertices: int
+    compacted: bool
+    total_seconds: float
+
+
+class StreamService:
+    def __init__(self, g: csr.Graph, config: Optional[StreamConfig] = None):
+        self.config = config or StreamConfig()
+        self.dg = DeltaGraph(g)
+        self.pr = IncrementalPageRank(
+            self.dg, damping=self.config.damping,
+            epsilon=self.config.pr_epsilon,
+            max_iters=self.config.pr_max_iters)
+        self.regrouper = (
+            IncrementalDBG(self.dg.out_deg,
+                           hysteresis=self.config.hysteresis,
+                           spec_drift_tol=self.config.spec_drift_tol)
+            if self.config.regroup_every else None)
+        self._sssp: Dict[int, IncrementalSSSP] = {}
+        self.batches_applied = 0
+        self.compactions = 0
+        self.history: List[IngestStats] = []
+        self.remap_deltas: List[RemapDelta] = []
+        # vertices touched since the last regroup pass (regroup_every > 1
+        # must not drop degree updates from the skipped batches)
+        self._touched_since_regroup: set = set()
+
+    # -- ingest ---------------------------------------------------------------
+    def ingest(self, add_src=None, add_dst=None, add_w=None,
+               del_src=None, del_dst=None) -> IngestStats:
+        t0 = time.perf_counter()
+        result: ApplyResult = self.dg.apply(
+            add_src=add_src, add_dst=add_dst, add_w=add_w,
+            del_src=del_src, del_dst=del_dst)
+        self.pr.ingest(result)
+        for issp in self._sssp.values():
+            issp.ingest(result)
+        self.batches_applied += 1
+
+        regroup_s, moved = 0.0, 0
+        if self.regrouper is not None:
+            self._touched_since_regroup.update(result.touched.tolist())
+            if (self.batches_applied % self.config.regroup_every == 0
+                    and self._touched_since_regroup):
+                touched = np.fromiter(self._touched_since_regroup,
+                                      dtype=np.int64)
+                self._touched_since_regroup.clear()
+                delta = self.regrouper.update(touched, self.dg.out_deg[touched])
+                self.remap_deltas.append(delta)
+                regroup_s, moved = delta.seconds, delta.num_moved
+
+        compacted = False
+        if self.dg.should_compact(self.config.compact_threshold):
+            self.dg.compact()
+            self.pr.resync()
+            self.compactions += 1
+            compacted = True
+
+        stats = IngestStats(
+            batch_index=self.batches_applied,
+            inserted=result.num_inserted, deleted=result.num_deleted,
+            apply_seconds=result.seconds, regroup_seconds=regroup_s,
+            moved_vertices=moved, compacted=compacted,
+            total_seconds=time.perf_counter() - t0)
+        self.history.append(stats)
+        return stats
+
+    # -- queries --------------------------------------------------------------
+    def pagerank(self) -> np.ndarray:
+        return self.pr.query()
+
+    def sssp(self, root: int) -> np.ndarray:
+        root = int(root)
+        if root not in self._sssp:
+            self._sssp[root] = IncrementalSSSP(self.dg, root)
+        return self._sssp[root].query()
+
+    def current_mapping(self) -> Optional[np.ndarray]:
+        return (self.regrouper.current_mapping()
+                if self.regrouper is not None else None)
+
+    def snapshot(self) -> csr.Graph:
+        return self.dg.snapshot()
+
+    # -- the cachesim hook ----------------------------------------------------
+    def locality(self, mode: str = "pull",
+                 max_len: int = 1_500_000) -> Dict[str, Dict[str, float]]:
+        """MPKA of the current graph: original ids vs. the live DBG mapping.
+
+        Measures locality decay under churn (the more updates applied without
+        regrouping, the further the hot vertices drift from a dense layout)
+        and how much the incremental mapping recovers.
+        """
+        g = self.snapshot()
+        levels = scaled_hierarchy(g.num_vertices)
+        out = {}
+        layouts = {"identity": g}
+        if self.regrouper is not None:
+            layouts["incremental_dbg"] = csr.relabel(
+                g, self.regrouper.current_mapping(), name=g.name + "+idbg")
+        for label, g2 in layouts.items():
+            tr = to_blocks(property_trace(g2, mode, max_len=max_len))
+            out[label] = mpka(stack_distances(tr), levels)
+        return out

@@ -93,3 +93,51 @@ def test_weighted_graph():
     g = datasets.load_weighted("lj", "test")
     assert g.in_csr.weights is not None
     assert np.all(g.in_csr.weights > 0)
+
+
+@st.composite
+def weighted_edge_lists_with_perm(draw):
+    n = draw(st.integers(min_value=2, max_value=50))
+    m = draw(st.integers(min_value=0, max_value=250))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    wq = draw(st.lists(st.integers(1, 64), min_size=m, max_size=m))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    perm = np.random.default_rng(seed).permutation(n).astype(np.int64)
+    return (n, np.array(src, np.int64), np.array(dst, np.int64),
+            np.array(wq, np.float32) / 4.0, perm)
+
+
+@settings(max_examples=50, deadline=None)
+@given(weighted_edge_lists_with_perm())
+def test_relabel_preserves_weighted_edge_multiset(args):
+    """relabel under ANY permutation preserves the (src, dst, weight) edge
+    multiset — including parallel edges with distinct weights, the invariant
+    the weighted-SSSP path depends on — in BOTH CSR directions."""
+    n, src, dst, w, perm = args
+    g = csr.from_edges(src, dst, n, weights=w)
+    g2 = csr.relabel(g, perm)
+    csr.validate(g2)
+    s2, d2, w2 = csr.to_edges(g2)
+    want = sorted(zip(perm[src].tolist(), perm[dst].tolist(), w.tolist()))
+    assert sorted(zip(s2.tolist(), d2.tolist(), w2.tolist())) == want
+    # in-direction carries the same weighted multiset
+    in_src = g2.in_csr.indices
+    in_dst = np.repeat(np.arange(n, dtype=np.int64), g2.in_degrees())
+    assert sorted(zip(in_src.tolist(), in_dst.tolist(),
+                      g2.in_csr.weights.tolist())) == want
+
+
+def test_relabel_weighted_sssp_invariance_random_permutation():
+    """End-to-end through the weighted-SSSP path: distances commute with an
+    arbitrary (non-technique) relabeling."""
+    import jax.numpy as jnp
+
+    from repro.apps import sssp, to_arrays
+
+    g = datasets.load_weighted("lj", "test", seed=4)
+    perm = np.random.default_rng(11).permutation(g.num_vertices).astype(np.int64)
+    g2 = csr.relabel(g, perm)
+    d1, _ = sssp(to_arrays(g), jnp.int32(0))
+    d2, _ = sssp(to_arrays(g2), jnp.int32(int(perm[0])))
+    np.testing.assert_allclose(np.asarray(d2)[perm], np.asarray(d1), rtol=1e-5)

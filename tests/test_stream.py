@@ -1,0 +1,376 @@
+"""repro.stream correctness: delta-CSR vs flat-CSR oracles, incremental
+refresh vs full recompute, incremental DBG vs batch DBG.
+
+The acceptance bar (ISSUE 2): after every update batch, stream PageRank must
+equal ``apps.pagerank`` on the compacted graph to 1e-5, and incremental-DBG
+group assignments must equal batch ``core.reorder.dbg`` on the current degree
+vector (modulo the documented hysteresis band).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import engine, pagerank, sssp, to_arrays
+from repro.core import reorder
+from repro.core.reorder import _assign_groups
+from repro.graph import csr, datasets
+from repro.stream import (
+    DeltaGraph,
+    IncrementalDBG,
+    IncrementalPageRank,
+    IncrementalSSSP,
+    StreamConfig,
+    StreamService,
+    edge_map_pull_stream,
+    edge_map_push_stream,
+    stream_arrays,
+)
+
+
+@pytest.fixture(scope="module")
+def base_graph():
+    return datasets.load("lj", "test", seed=1)
+
+
+@pytest.fixture(scope="module")
+def weighted_base():
+    return datasets.load_weighted("lj", "test", seed=1)
+
+
+def _random_batch(dg, rng, n_add=120, n_del=40):
+    v = dg.num_vertices
+    add_src = rng.integers(0, v, n_add)
+    add_dst = rng.integers(0, v, n_add)
+    es, ed, _ = dg.alive_edges()
+    idx = rng.choice(es.shape[0], size=n_del, replace=False)
+    return add_src, add_dst, es[idx], ed[idx]
+
+
+# ---------------------------------------------------------------------------
+# DeltaGraph substrate
+# ---------------------------------------------------------------------------
+
+def test_delta_graph_matches_edge_multiset_oracle(base_graph):
+    dg = DeltaGraph(base_graph)
+    s, d, _ = csr.to_edges(base_graph)
+    oracle = sorted(zip(s.tolist(), d.tolist()))
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        a_s, a_d, d_s, d_d = _random_batch(dg, rng)
+        dg.apply(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+        oracle.extend(zip(a_s.tolist(), a_d.tolist()))
+        for pair in zip(d_s.tolist(), d_d.tolist()):
+            oracle.remove(pair)
+        es, ed, _ = dg.alive_edges()
+        assert sorted(zip(es.tolist(), ed.tolist())) == sorted(oracle)
+        assert dg.num_edges == len(oracle)
+        snap = dg.snapshot()
+        csr.validate(snap)
+        assert np.array_equal(dg.out_deg, snap.out_degrees())
+        assert np.array_equal(dg.in_deg, snap.in_degrees())
+
+
+def test_delta_graph_compact_is_lossless(base_graph):
+    dg = DeltaGraph(base_graph)
+    rng = np.random.default_rng(1)
+    a_s, a_d, d_s, d_d = _random_batch(dg, rng, n_add=300, n_del=100)
+    dg.apply(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+    before = sorted(zip(*[x.tolist() for x in dg.alive_edges()[:2]]))
+    assert dg.churn == 400
+    g2 = dg.compact()
+    assert dg.churn == 0 and dg.base is g2
+    after = sorted(zip(*[x.tolist() for x in dg.alive_edges()[:2]]))
+    assert before == after
+
+
+def test_delta_graph_delete_missing_edge_raises(base_graph):
+    dg = DeltaGraph(base_graph)
+    es, ed, _ = dg.alive_edges()
+    pairs = set(zip(es.tolist(), ed.tolist()))
+    v = dg.num_vertices
+    missing = next((a, b) for a in range(v) for b in range(v)
+                   if (a, b) not in pairs)
+    with pytest.raises(KeyError):
+        dg.apply(del_src=[missing[0]], del_dst=[missing[1]])
+
+
+def test_delta_graph_weighted_deletion_removes_matching_weight(weighted_base):
+    dg = DeltaGraph(weighted_base)
+    es, ed, ew = dg.alive_edges()
+    res = dg.apply(del_src=es[:5], del_dst=ed[:5])
+    np.testing.assert_allclose(res.del_w, ew[:5])
+    # inserted weights survive the round-trip
+    dg.apply(add_src=[0, 1], add_dst=[2, 3], add_w=[7.5, 2.25])
+    _, _, w2 = dg.alive_edges()
+    assert 7.5 in w2 and 2.25 in w2
+
+
+def test_delta_graph_out_edges_of_matches_snapshot(base_graph):
+    dg = DeltaGraph(base_graph)
+    rng = np.random.default_rng(2)
+    a_s, a_d, d_s, d_d = _random_batch(dg, rng)
+    dg.apply(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+    snap = dg.snapshot()
+    probe = rng.integers(0, dg.num_vertices, 50)
+    s, d = dg.out_edges_of(np.unique(probe))
+    want = []
+    for u in np.unique(probe):
+        for w in snap.out_csr.neighbors(u):
+            want.append((int(u), int(w)))
+    assert sorted(zip(s.tolist(), d.tolist())) == sorted(want)
+
+
+def test_stream_edge_maps_equal_engine_on_static_graph(base_graph):
+    """With no updates applied, the stream edge maps must reproduce the
+    engine's pull/push exactly (alive masks all-true, empty delta)."""
+    dg = DeltaGraph(base_graph)
+    sa = stream_arrays(dg)
+    ga = to_arrays(base_graph)
+    prop = jnp.asarray(
+        np.random.default_rng(0).random(dg.num_vertices).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(edge_map_pull_stream(sa, prop)),
+        np.asarray(engine.edge_map_pull(ga, prop)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(edge_map_push_stream(sa, prop)),
+        np.asarray(engine.edge_map_push(ga, prop)), rtol=1e-6)
+
+
+def test_stream_edge_map_min_ignores_padding_and_tombstones():
+    """Masked edges (delta padding, tombstones) must contribute the
+    reduction's identity, not 0.0 — regression for the min/max default."""
+    g = csr.from_edges(np.array([1, 2, 0]), np.array([0, 0, 2]), 3)
+    dg = DeltaGraph(g)
+    prop = jnp.asarray(np.array([5.0, 9.0, 7.0], np.float32))
+    # in(0) = {1, 2} -> min(9, 7); the padded delta edge must not inject 0.0
+    got = np.asarray(edge_map_pull_stream(stream_arrays(dg), prop, reduce="min"))
+    np.testing.assert_allclose(got, [7.0, np.inf, 5.0])
+    dg.apply(del_src=[2], del_dst=[0])  # tombstone 2->0; in(0) = {1}
+    got = np.asarray(edge_map_pull_stream(stream_arrays(dg), prop, reduce="min"))
+    np.testing.assert_allclose(got, [9.0, np.inf, 5.0])
+    got = np.asarray(edge_map_push_stream(stream_arrays(dg), prop, reduce="min"))
+    np.testing.assert_allclose(got, [9.0, np.inf, 5.0])
+
+
+# ---------------------------------------------------------------------------
+# Incremental PageRank (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+def test_incremental_pagerank_matches_full_recompute(base_graph):
+    svc = StreamService(base_graph, StreamConfig(compact_threshold=0.08))
+    rng = np.random.default_rng(3)
+    saw_compaction = False
+    for _ in range(6):
+        a_s, a_d, d_s, d_d = _random_batch(svc.dg, rng)
+        st = svc.ingest(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+        saw_compaction |= st.compacted
+        r_inc = svc.pagerank()
+        full, _ = pagerank(to_arrays(svc.snapshot()), tol=1e-10, max_iters=256)
+        np.testing.assert_allclose(r_inc, np.asarray(full), atol=1e-5)
+    assert saw_compaction, "compaction threshold never triggered"
+
+
+def test_incremental_pagerank_converges_faster_than_cold_start(base_graph):
+    """A small batch perturbs few vertices: warm re-convergence must take
+    fewer push iterations than the initial cold solve."""
+    dg = DeltaGraph(base_graph)
+    ipr = IncrementalPageRank(dg)
+    ipr.refresh()
+    cold = ipr.last_iters
+    rng = np.random.default_rng(4)
+    a_s, a_d, d_s, d_d = _random_batch(dg, rng, n_add=20, n_del=5)
+    ipr.ingest(dg.apply(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d))
+    warm = ipr.refresh()
+    assert 0 < warm < cold
+
+
+def test_incremental_pagerank_weighted_graph_unaffected(weighted_base):
+    """PR ignores edge weights; the weighted delta path must too."""
+    svc = StreamService(weighted_base)
+    rng = np.random.default_rng(5)
+    a_s, a_d, d_s, d_d = _random_batch(svc.dg, rng, n_add=50, n_del=20)
+    svc.ingest(add_src=a_s, add_dst=a_d,
+               add_w=rng.uniform(1, 9, 50).astype(np.float32),
+               del_src=d_s, del_dst=d_d)
+    full, _ = pagerank(to_arrays(svc.snapshot()), tol=1e-10, max_iters=256)
+    np.testing.assert_allclose(svc.pagerank(), np.asarray(full), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Incremental SSSP
+# ---------------------------------------------------------------------------
+
+def test_incremental_sssp_insert_only_stays_incremental(weighted_base):
+    svc = StreamService(weighted_base)
+    rng = np.random.default_rng(6)
+    d0 = svc.sssp(0)
+    ref, _ = sssp(to_arrays(svc.snapshot()), jnp.int32(0))
+    np.testing.assert_allclose(d0, np.asarray(ref), rtol=1e-5)
+    v = svc.dg.num_vertices
+    for _ in range(3):
+        k = 80
+        svc.ingest(add_src=rng.integers(0, v, k),
+                   add_dst=rng.integers(0, v, k),
+                   add_w=rng.uniform(1, 16, k).astype(np.float32))
+        got = svc.sssp(0)
+        ref, _ = sssp(to_arrays(svc.snapshot()), jnp.int32(0))
+        ref = np.asarray(ref)
+        assert np.array_equal(np.isinf(got), np.isinf(ref))
+        fin = np.isfinite(ref)
+        np.testing.assert_allclose(got[fin], ref[fin], rtol=1e-5)
+    assert svc._sssp[0].full_recomputes == 0, "insert-only stream recomputed"
+
+
+def test_incremental_sssp_deletion_of_used_edge_recomputes(weighted_base):
+    dg = DeltaGraph(weighted_base)
+    issp = IncrementalSSSP(dg, 0)
+    dist = issp.query()
+    # find an edge on a shortest path: dist[dst] == dist[src] + w
+    es, ed, ew = dg.alive_edges()
+    used = (np.isfinite(dist[es]) & np.isfinite(dist[ed])
+            & np.isclose(dist[es] + ew, dist[ed], rtol=1e-5))
+    assert used.any()
+    i = int(np.argmax(used))
+    issp.ingest(dg.apply(del_src=[es[i]], del_dst=[ed[i]]))
+    got = issp.query()
+    assert issp.full_recomputes == 1
+    ref, _ = sssp(to_arrays(dg.snapshot()), jnp.int32(0))
+    ref = np.asarray(ref)
+    assert np.array_equal(np.isinf(got), np.isinf(ref))
+    fin = np.isfinite(ref)
+    np.testing.assert_allclose(got[fin], ref[fin], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Incremental DBG (the reordering layer)
+# ---------------------------------------------------------------------------
+
+def test_incremental_dbg_initial_mapping_equals_batch_dbg(base_graph):
+    degs = base_graph.out_degrees()
+    idbg = IncrementalDBG(degs)
+    np.testing.assert_array_equal(idbg.current_mapping(),
+                                  reorder.dbg(degs).mapping)
+
+
+def test_incremental_dbg_zero_hysteresis_equals_batch_assignment(base_graph):
+    """Degree-preserving churn (mean unchanged): with hysteresis=0 the online
+    assignment must equal batch DBG on the current degree vector exactly."""
+    degs = base_graph.out_degrees().copy()
+    idbg = IncrementalDBG(degs, hysteresis=0.0)
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        # swap degrees between random vertex pairs: total degree preserved
+        a = rng.choice(degs.shape[0], 40, replace=False)
+        b = rng.permutation(a)
+        degs[a], degs[b] = degs[b].copy(), degs[a].copy()
+        touched = np.unique(np.concatenate([a, b]))
+        idbg.update(touched, degs[touched])
+        spec = reorder.dbg_spec(max(1.0, degs.mean()))
+        assert spec.boundaries == idbg.spec.boundaries
+        np.testing.assert_array_equal(
+            idbg.group_of, _assign_groups(degs, spec.boundaries))
+        # and the full mapping stays a permutation with contiguous groups
+        m = idbg.current_mapping()
+        assert sorted(m.tolist()) == list(range(degs.shape[0]))
+        order = np.argsort(m)
+        assert np.all(np.diff(idbg.group_of[order]) >= 0)
+
+
+def test_incremental_dbg_hysteresis_band_property(base_graph):
+    """With hysteresis h, a vertex may lag its pure group only while its
+    degree sits inside the documented band of the adjacent boundary."""
+    h = 0.5
+    degs = base_graph.out_degrees().copy()
+    idbg = IncrementalDBG(degs, hysteresis=h, spec_drift_tol=10.0)
+    rng = np.random.default_rng(8)
+    for _ in range(5):
+        vs = rng.choice(degs.shape[0], 60, replace=False)
+        degs[vs] = np.maximum(
+            0, degs[vs] + rng.integers(-6, 7, vs.shape[0]))
+        idbg.update(vs, degs[vs])
+    b = np.asarray(idbg.spec.boundaries, dtype=np.int64)
+    pure = _assign_groups(degs, idbg.spec.boundaries)
+    inc = idbg.group_of
+    lag = np.where(inc != pure)[0]
+    for v in lag:
+        if pure[v] < inc[v]:  # hotter than assigned: below the up-margin
+            assert degs[v] < np.ceil(b[inc[v] - 1] * (1 + h))
+        else:  # colder than assigned: above the down-margin
+            assert degs[v] >= b[inc[v]] / (1 + h)
+
+
+def test_incremental_dbg_oscillating_vertex_does_not_churn(base_graph):
+    """A vertex wobbling around a boundary must not move every update."""
+    degs = base_graph.out_degrees().copy()
+    idbg = IncrementalDBG(degs, hysteresis=0.25, spec_drift_tol=10.0)
+    b = idbg.spec.boundaries[2]  # a hot-group boundary
+    v = 0
+    moves = 0
+    for i in range(20):
+        deg = b if i % 2 == 0 else b - 1  # oscillate one unit around b
+        degs[v] = deg
+        moves += idbg.update(np.array([v]), np.array([deg])).num_moved
+    assert moves <= 1  # at most the initial positioning, never per-update
+
+
+def test_incremental_dbg_spec_drift_triggers_rebuild(base_graph):
+    degs = base_graph.out_degrees().copy()
+    idbg = IncrementalDBG(degs, spec_drift_tol=0.2)
+    old_bounds = idbg.spec.boundaries
+    vs = np.arange(degs.shape[0] // 2)
+    degs[vs] = degs[vs] + 40  # inflate mean well past the drift tolerance
+    delta = idbg.update(vs, degs[vs])
+    assert delta.spec_rebuilt
+    assert idbg.spec.boundaries != old_bounds
+    np.testing.assert_array_equal(
+        idbg.group_of, _assign_groups(degs, idbg.spec.boundaries))
+
+
+# ---------------------------------------------------------------------------
+# Service loop + locality hook
+# ---------------------------------------------------------------------------
+
+def test_service_regroup_every_accumulates_touched(base_graph):
+    """regroup_every > 1 must not drop degree updates from skipped batches:
+    at the next pass the regrouper sees every vertex touched since the last
+    one, so its degree vector and assignment match the live graph."""
+    cfg = StreamConfig(regroup_every=2, hysteresis=0.0, spec_drift_tol=100.0)
+    svc = StreamService(base_graph, cfg)
+    rng = np.random.default_rng(10)
+    for i in range(4):
+        a_s, a_d, d_s, d_d = _random_batch(svc.dg, rng, n_add=80, n_del=20)
+        st = svc.ingest(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+        ran_regroup = (i % 2) == 1
+        assert (st.regroup_seconds > 0) == ran_regroup
+        if ran_regroup:
+            np.testing.assert_array_equal(svc.regrouper.degrees,
+                                          svc.dg.out_deg)
+            np.testing.assert_array_equal(
+                svc.regrouper.group_of,
+                _assign_groups(svc.dg.out_deg,
+                               svc.regrouper.spec.boundaries))
+
+
+def test_incremental_sssp_noop_query_is_free(weighted_base):
+    dg = DeltaGraph(weighted_base)
+    issp = IncrementalSSSP(dg, 0)
+    issp.query()
+    assert issp.refresh() == 0  # unchanged graph: no work, no device upload
+
+
+def test_service_history_and_locality_hook(base_graph):
+    svc = StreamService(base_graph, StreamConfig(regroup_every=1))
+    rng = np.random.default_rng(9)
+    for _ in range(3):
+        a_s, a_d, d_s, d_d = _random_batch(svc.dg, rng, n_add=60, n_del=20)
+        svc.ingest(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+    assert len(svc.history) == 3
+    assert svc.batches_applied == 3
+    assert all(st.total_seconds > 0 for st in svc.history)
+    loc = svc.locality(max_len=200_000)
+    assert set(loc) == {"identity", "incremental_dbg"}
+    for layout in loc.values():
+        assert set(layout) == {"l1_mpka", "l2_mpka", "l3_mpka"}
+        assert all(np.isfinite(x) and x >= 0 for x in layout.values())
+    m = svc.current_mapping()
+    assert sorted(m.tolist()) == list(range(base_graph.num_vertices))
