@@ -16,7 +16,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.cachesim import (amat_cycles, mpka, property_trace, scaled_hierarchy,
+from repro.cachesim import (DEFAULT_TRACE_LEN, amat_cycles, mpka,
+                            property_trace, scaled_hierarchy,
                             stack_distances, to_blocks)
 from repro.core import reorder
 from repro.core.gorder_lite import gorder_lite
@@ -34,8 +35,6 @@ CPU_GHZ = 2.2  # paper's Xeon E5-2630 v4
 
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "experiments")
-
-_MAX_TRACE = 1_500_000
 
 
 @functools.lru_cache(maxsize=64)
@@ -69,7 +68,7 @@ def sim(key: str, technique: str, mode: str, degree_source: str,
                                       seed=seed)
         secs = r.seconds
     lv = scaled_hierarchy(g.num_vertices)
-    tr = to_blocks(property_trace(g2, mode, max_len=_MAX_TRACE))
+    tr = to_blocks(property_trace(g2, mode, max_len=DEFAULT_TRACE_LEN))
     d = stack_distances(tr)
     return amat_cycles(d, lv), mpka(d, lv), secs, tr.shape[0]
 

@@ -32,15 +32,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 
 import numpy as np
 
-from repro.cachesim import mpka, property_trace, scaled_hierarchy, \
-    stack_distances, to_blocks
+from repro.cachesim import scaled_hierarchy
 from repro.core import reorder
 from repro.graph import csr as csr_mod
 from repro.graph import datasets
-from repro.stream import StreamConfig, StreamService
+from repro.stream import StreamConfig, StreamService, layout_mpka
 
 POLICIES = ("identity", "incremental_dbg")
-_MAX_TRACE = 1_500_000
 
 
 class ChurnStream:
@@ -69,12 +67,6 @@ class ChurnStream:
         idx = self.rng.choice(es.shape[0], size=min(n_del, es.shape[0]),
                               replace=False)
         return add_src, add_dst, es[idx], ed[idx]
-
-
-def layout_quality(g, mapping, levels, mode="pull"):
-    g2 = g if mapping is None else csr_mod.relabel(g, mapping)
-    tr = to_blocks(property_trace(g2, mode, max_len=_MAX_TRACE))
-    return mpka(stack_distances(tr), levels)
 
 
 def bench_cell(key: str, scale: str, policy: str, batch_size: int,
@@ -115,6 +107,11 @@ def bench_cell(key: str, scale: str, policy: str, batch_size: int,
     if shared_final is not None and cache_key in shared_final:
         final, levels, full_dbg, full_relabel_s, mpka_id, mpka_full = \
             shared_final[cache_key]
+        if (final.num_vertices != svc.dg.num_vertices
+                or final.num_edges != svc.dg.num_edges):
+            raise RuntimeError(
+                "update stream diverged across policies; the shared "
+                "final-graph cache assumption no longer holds")
     else:
         final = svc.snapshot()
         levels = scaled_hierarchy(final.num_vertices)
@@ -122,8 +119,8 @@ def bench_cell(key: str, scale: str, policy: str, batch_size: int,
         t0 = time.perf_counter()
         csr_mod.relabel(final, full_dbg.mapping)
         full_relabel_s = time.perf_counter() - t0
-        mpka_id = layout_quality(final, None, levels)
-        mpka_full = layout_quality(final, full_dbg.mapping, levels)
+        mpka_id = layout_mpka(final, None, levels)
+        mpka_full = layout_mpka(final, full_dbg.mapping, levels)
         if shared_final is not None:
             shared_final[cache_key] = (final, levels, full_dbg,
                                        full_relabel_s, mpka_id, mpka_full)
@@ -149,7 +146,7 @@ def bench_cell(key: str, scale: str, policy: str, batch_size: int,
         "mpka_full_dbg": mpka_full,
     }
     if policy == "incremental_dbg":
-        cell["mpka_incremental"] = layout_quality(
+        cell["mpka_incremental"] = layout_mpka(
             final, svc.current_mapping(), levels)
         cell["regroup_vs_full_dbg_cost_ratio"] = (
             cell["regroup_seconds_per_batch"]

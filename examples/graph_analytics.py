@@ -75,11 +75,12 @@ def main():
             del_src=es[drop], del_dst=ed[drop])
         t0 = time.time()
         ranks = svc.pagerank()
+        dt = time.time() - t0
         full, it_full = pagerank(to_arrays(svc.snapshot()), tol=1e-10,
                                  max_iters=256)
         err = float(np.abs(ranks - np.asarray(full)).max())
         print(f"  batch {b}: +{st.inserted}/-{st.deleted} edges, "
-              f"refresh {svc.pr.last_iters} push iters in {time.time()-t0:.3f}s "
+              f"refresh {svc.pr.last_iters} push iters in {dt:.3f}s "
               f"(full recompute {int(it_full)} iters), max err {err:.1e}, "
               f"regrouped {st.moved_vertices} vertices in "
               f"{st.regroup_seconds*1e3:.2f} ms")

@@ -8,4 +8,4 @@ from .simulator import (  # noqa: F401
     stack_distances,
     stack_distances_np,
 )
-from .trace import property_trace, to_blocks  # noqa: F401
+from .trace import DEFAULT_TRACE_LEN, property_trace, to_blocks  # noqa: F401

@@ -18,7 +18,13 @@ import numpy as np
 
 from ..graph import csr
 
-__all__ = ["property_trace", "to_blocks"]
+__all__ = ["DEFAULT_TRACE_LEN", "property_trace", "to_blocks"]
+
+# Canonical trace cap for benchmark/service MPKA measurements: long enough
+# that stack-distance statistics stabilize, short enough to simulate in
+# seconds.  The single source of truth — benchmarks and the stream service
+# must not carry private copies.
+DEFAULT_TRACE_LEN = 1_500_000
 
 
 def property_trace(g: csr.Graph, mode: str = "pull", max_len: int | None = None) -> np.ndarray:

@@ -26,4 +26,9 @@ from .incremental import (  # noqa: F401
     stream_arrays,
 )
 from .regroup import IncrementalDBG, RemapDelta  # noqa: F401
-from .service import IngestStats, StreamConfig, StreamService  # noqa: F401
+from .service import (  # noqa: F401
+    IngestStats,
+    StreamConfig,
+    StreamService,
+    layout_mpka,
+)

@@ -152,6 +152,17 @@ class DeltaGraph:
         """Inserted + deleted edges since the last compaction."""
         return self.inserted_since_compact + self.deleted_since_compact
 
+    @property
+    def dead_base_edges(self) -> int:
+        """Tombstoned BASE edge count — monotone per base, reset by rebind.
+
+        Part of the public contract: ``stream.incremental`` keys its cached
+        device alive-masks on ``(base identity, dead_base_edges)``, so any
+        mutation of ``base_alive`` must be reflected here (and is: only
+        ``apply`` flips base tombstones, incrementing this counter).
+        """
+        return self._dead_base
+
     def should_compact(self, threshold: float = 0.25) -> bool:
         return self.churn > threshold * max(1, self.base.num_edges)
 
@@ -214,8 +225,14 @@ class DeltaGraph:
         """Fold base + deltas − tombstones into a fresh flat base CSR."""
         g = self.snapshot(name)
         self._rebind(g)
-        assert np.array_equal(self.out_deg, g.out_degrees())
-        assert np.array_equal(self.in_deg, g.in_degrees())
+        if not (np.array_equal(self.out_deg, g.out_degrees())
+                and np.array_equal(self.in_deg, g.in_degrees())):
+            raise RuntimeError(
+                "DeltaGraph degree bookkeeping diverged from the compacted "
+                "CSR (max out-degree drift "
+                f"{int(np.abs(self.out_deg - g.out_degrees()).max())}, "
+                "max in-degree drift "
+                f"{int(np.abs(self.in_deg - g.in_degrees()).max())})")
         return g
 
     # -- the batched update path ---------------------------------------------
@@ -356,9 +373,7 @@ class DeltaGraph:
         touched = np.unique(np.concatenate([a_src, a_dst, d_src, d_dst]))
         return ApplyResult(
             add_src=a_src, add_dst=a_dst,
-            add_w=(np.asarray(add_w, np.float32).ravel()
-                   if add_w is not None else
-                   (np.ones(k, np.float32) if self.weighted else None)),
+            add_w=w_add,
             del_src=d_src, del_dst=d_dst,
             del_w=removed_w if self.weighted else None,
             touched=touched,

@@ -24,7 +24,10 @@ Incremental SSSP uses the classic asymmetry: edge *insertions* only ever
 shorten paths, so relaxation restarts from the improved destinations; an edge
 *deletion* is a problem only when the deleted edge supported a shortest path
 (``dist[dst] == dist[src] + w``), in which case we conservatively recompute
-from scratch — detected per batch, exact either way.
+from scratch — detected at refresh time, exact either way.  A deletion that
+lands on an edge still waiting in the pending-insert buffers (inserted after
+the last refresh, so invisible to ``dist``) is scrubbed from those buffers
+instead, so ``refresh`` never relaxes through a tombstoned edge.
 """
 from __future__ import annotations
 
@@ -103,6 +106,16 @@ def stream_arrays(dg: DeltaGraph) -> StreamArrays:
         cache = (base, bd)
         dg._stream_base_cache = cache
     bd = cache[1]
+    # The O(E) alive masks change only when a BASE tombstone lands (extras
+    # deletions live in the delta buffer below); cache the device arrays on
+    # (base identity, tombstone count) so insert-only refreshes skip the
+    # host scatter and the two O(E) uploads.
+    masks = getattr(dg, "_stream_mask_cache", None)
+    if (masks is None or masks[0] is not dg.base
+            or masks[1] != dg.dead_base_edges):
+        masks = (dg.base, dg.dead_base_edges,
+                 jnp.asarray(dg.in_alive_mask()), jnp.asarray(dg.base_alive))
+        dg._stream_mask_cache = masks
     ex_src, ex_dst, ex_w, ex_alive = dg.extras()
     n = ex_src.shape[0]
     pad = _next_pow2(max(1, n))
@@ -116,8 +129,8 @@ def stream_arrays(dg: DeltaGraph) -> StreamArrays:
     p_alive[:n] = ex_alive
     return StreamArrays(
         **bd,
-        in_alive=jnp.asarray(dg.in_alive_mask()),
-        out_alive=jnp.asarray(dg.base_alive),
+        in_alive=masks[2],
+        out_alive=masks[3],
         ex_src=jnp.asarray(p_src),
         ex_dst=jnp.asarray(p_dst),
         ex_w=jnp.asarray(p_w),
@@ -275,54 +288,64 @@ class IncrementalPageRank:
         v = dg.num_vertices
         self.rank = np.full(v, 1.0 / v, np.float32)
         self._residual = np.zeros(v, np.float32)
+        # uniform component of the residual (dangling-mass changes), kept as
+        # a scalar and folded in at refresh so ingest stays batch-local
+        self._res_uniform = 0.0
         self._needs_full_residual = True  # first refresh = initial full solve
         self._dirty = True
         self.last_iters = 0
         self.total_push_iters = 0
 
     def ingest(self, result: ApplyResult) -> None:
-        """Fold one applied batch into the residual — O(batch + touched)."""
+        """Fold one applied batch into the residual — O(batch + touched).
+
+        Every array below is indexed over the batch's candidate sources and
+        their adjacency, never the full vertex set: the pre-batch degrees
+        come from ``result.cand_old_out_deg`` (all sources the batch named
+        are in ``cand_sources``), and the uniform dangling-mass term is
+        carried as a scalar instead of being spread over V entries here.
+        """
         if self._needs_full_residual:
             self._dirty = True
             return
         dg = self.dg
-        v = dg.num_vertices
-        r = self.rank.astype(np.float64)
+        rank = self.rank
         odn = dg.out_deg
-        # pre-batch out-degrees, reconstructed from the batch itself
-        odo = odn.copy()
-        np.add.at(odo, result.add_src, -1)
-        np.add.at(odo, result.del_src, 1)
+        cand = result.cand_sources  # sorted (np.unique output)
+        odo_cand = result.cand_old_out_deg
+        changed = odn[cand] != odo_cand
+        c_sources = cand[changed]
 
-        changed = odn[result.cand_sources] != result.cand_old_out_deg
-        c_sources = result.cand_sources[changed]
-        c_mask = np.zeros(v, dtype=bool)
-        c_mask[c_sources] = True
-
-        delta = np.zeros(v, np.float64)
         # + contributions of every CURRENT edge whose source changed degree,
         #   plus edges inserted from unchanged sources
         s1s, s1d = dg.out_edges_of(c_sources)
-        keep = ~c_mask[result.add_src]
+        keep = ~np.isin(result.add_src, c_sources)
         s1s = np.concatenate([s1s, result.add_src[keep]])
         s1d = np.concatenate([s1d, result.add_dst[keep]])
-        np.add.at(delta, s1d, r[s1s] / np.maximum(1, odn[s1s]))
+        v1 = rank[s1s].astype(np.float64) / np.maximum(1, odn[s1s])
         # - contributions of every PRE-BATCH edge whose source changed degree,
-        #   plus edges deleted from unchanged sources
-        old_c = c_mask[result.old_edges_src]
+        #   plus edges deleted from unchanged sources (all such sources are
+        #   in ``cand``, so their pre-batch degree is in ``odo_cand``)
+        old_c = np.isin(result.old_edges_src, c_sources)
         s2s = result.old_edges_src[old_c]
         s2d = result.old_edges_dst[old_c]
-        keep = ~c_mask[result.del_src]
+        keep = ~np.isin(result.del_src, c_sources)
         s2s = np.concatenate([s2s, result.del_src[keep]])
         s2d = np.concatenate([s2d, result.del_dst[keep]])
-        np.add.at(delta, s2d, -(r[s2s] / np.maximum(1, odo[s2s])))
+        odo_s2 = odo_cand[np.searchsorted(cand, s2s)]
+        v2 = rank[s2s].astype(np.float64) / np.maximum(1, odo_s2)
+
+        idx = np.concatenate([s1d, s2d])
+        if idx.size:
+            u, inv = np.unique(idx, return_inverse=True)
+            acc = np.bincount(inv, weights=np.concatenate([v1, -v2]))
+            self._residual[u] = (self._residual[u].astype(np.float64)
+                                 + self.damping * acc).astype(np.float32)
         # dangling-mass change (uniformly spread term)
-        cand = result.cand_sources
-        dmass = float(np.sum(r[cand] * ((odn[cand] == 0).astype(np.float64)
-                                        - (odo[cand] == 0))))
-        self._residual = (self._residual.astype(np.float64)
-                          + self.damping * (delta + dmass / v)
-                          ).astype(np.float32)
+        r_cand = rank[cand].astype(np.float64)
+        dmass = float(np.sum(r_cand * ((odn[cand] == 0).astype(np.float64)
+                                       - (odo_cand == 0))))
+        self._res_uniform += self.damping * dmass / dg.num_vertices
         self._dirty = True
 
     def resync(self) -> None:
@@ -341,12 +364,18 @@ class IncrementalPageRank:
                 _pr_residual(sa, jnp.asarray(self.rank),
                              jnp.float32(self.damping)))
             self._needs_full_residual = False
+            self._res_uniform = 0.0
+        elif self._res_uniform:
+            self._residual = (self._residual.astype(np.float64)
+                              + self._res_uniform).astype(np.float32)
+            self._res_uniform = 0.0
         rank, res, it = _pr_converge(
             sa, jnp.asarray(self.rank), jnp.asarray(self._residual),
             jnp.float32(self.damping), jnp.float32(self.epsilon),
             self.max_iters)
         self.rank = np.asarray(rank)
-        self._residual = np.asarray(res)
+        # writable copy: ingest patches the residual in place batch-locally
+        self._residual = np.array(res)
         self.last_iters = int(it)
         self.total_push_iters += self.last_iters
         self._dirty = False
@@ -360,6 +389,18 @@ class IncrementalPageRank:
 # ---------------------------------------------------------------------------
 # Incremental SSSP
 # ---------------------------------------------------------------------------
+
+def _occurrence_rank(inv: np.ndarray) -> np.ndarray:
+    """Rank of each element within its key group (0 for a key's first
+    occurrence in array order, 1 for its second, ...)."""
+    order = np.argsort(inv, kind="stable")
+    sorted_inv = inv[order]
+    starts = np.flatnonzero(np.r_[True, np.diff(sorted_inv) != 0])
+    counts = np.diff(np.r_[starts, inv.size])
+    ranks = np.empty(inv.size, dtype=np.int64)
+    ranks[order] = np.arange(inv.size) - np.repeat(starts, counts)
+    return ranks
+
 
 @partial(jax.jit, static_argnames=("max_iters",))
 def _sssp_converge(sa: StreamArrays, dist, frontier, max_iters: int):
@@ -390,6 +431,9 @@ class IncrementalSSSP:
         self._pending_src: list = []
         self._pending_dst: list = []
         self._pending_w: list = []
+        self._del_src: list = []
+        self._del_dst: list = []
+        self._del_w: list = []
         self._needs_full = True
         self.full_recomputes = 0
         self.last_iters = 0
@@ -400,29 +444,101 @@ class IncrementalSSSP:
         return np.ones(n, np.float32) if w is None else w
 
     def ingest(self, result: ApplyResult) -> None:
+        """Record one applied batch — pure O(batch) appends.  The deletion
+        analysis (pending scrub + criticality check) is deferred to
+        ``refresh``: ``dist`` is static between refreshes, so the deferred
+        check is identical, and a long query-free churn stream stays linear
+        instead of re-scanning the pending buffers every batch."""
         if self._needs_full or self.dist is None:
             self._needs_full = True
             return
-        dist = self.dist
+        if result.add_src.size:
+            self._pending_src.append(result.add_src)
+            self._pending_dst.append(result.add_dst)
+            self._pending_w.append(self._edge_w(result, "add_w"))
         if result.del_src.size:
-            # a deletion matters only if the edge supported a shortest path
-            ds, dd = result.del_src, result.del_dst
-            w = self._edge_w(result, "del_w")
+            self._del_src.append(result.del_src)
+            self._del_dst.append(result.del_dst)
+            self._del_w.append(self._edge_w(result, "del_w"))
+
+    def _settle_deletions(self) -> None:
+        """Fold the recorded deletions into the pending state (refresh-time).
+
+        A deletion may target an edge still sitting in the pending insert
+        buffers (inserted since the last refresh, so invisible to ``dist`` —
+        and to the criticality check below when its destination was
+        unreachable).  Scrub one matching (src, dst, w) occurrence per
+        deletion first; otherwise the seeding in ``refresh`` would relax a
+        finite distance through a tombstoned edge.  A matched deletion needs
+        no criticality check: either it killed the pending insert itself
+        (never part of ``dist``), or it killed an identical (src, dst, w)
+        edge while a pending twin stays alive and preserves every path the
+        victim carried.
+        """
+        if not self._del_src:
+            return
+        ds = np.concatenate(self._del_src)
+        dd = np.concatenate(self._del_dst)
+        w = np.concatenate(self._del_w)
+        self._del_src, self._del_dst, self._del_w = [], [], []
+        unmatched = self._scrub_pending(ds, dd, w)
+        if np.any(unmatched):
+            dist = self.dist
+            ds, dd, w = ds[unmatched], dd[unmatched], w[unmatched]
+            # the deletion matters only if the edge supported a shortest path
             reach = np.isfinite(dist[ds])
             slack = dist[ds] + w - dist[dd]
             tol = 1e-4 * (1.0 + np.abs(dist[dd]))
             if np.any(reach & np.isfinite(dist[dd]) & (slack <= tol)):
                 self._needs_full = True
-                return
-        if result.add_src.size:
-            self._pending_src.append(result.add_src)
-            self._pending_dst.append(result.add_dst)
-            self._pending_w.append(self._edge_w(result, "add_w"))
+
+    def _scrub_pending(self, ds: np.ndarray, dd: np.ndarray,
+                       w: np.ndarray) -> np.ndarray:
+        """Drop one pending-insert occurrence matching each deletion.
+
+        Occurrences with identical (src, dst, w) are interchangeable, so the
+        matching reduces to per-key counting — each key scrubs
+        min(#deletions, #pending) occurrences.  One O((D + P) log(D + P))
+        pass per refresh.
+
+        Returns a bool mask over the deletions marking the ones that matched
+        nothing (these must still pass the criticality check).
+        """
+        nd = ds.shape[0]
+        unmatched = np.ones(nd, dtype=bool)
+        if not self._pending_src:
+            return unmatched
+        ps = np.concatenate(self._pending_src)
+        pd = np.concatenate(self._pending_dst)
+        pw = np.concatenate(self._pending_w)
+        trip = np.empty(nd + ps.shape[0], dtype=[
+            ("s", np.int64), ("d", np.int64), ("w", np.float32)])
+        trip["s"] = np.concatenate([ds, ps])
+        trip["d"] = np.concatenate([dd, pd])
+        trip["w"] = np.concatenate([w, pw])
+        uniq, inv = np.unique(trip, return_inverse=True)
+        inv_d, inv_p = inv[:nd], inv[nd:]
+        nk = uniq.shape[0]
+        scrub = np.minimum(np.bincount(inv_d, minlength=nk),
+                           np.bincount(inv_p, minlength=nk))
+        if not scrub.any():
+            return unmatched
+        unmatched = _occurrence_rank(inv_d) >= scrub[inv_d]
+        keep = _occurrence_rank(inv_p) >= scrub[inv_p]
+        if keep.any():
+            self._pending_src = [ps[keep]]
+            self._pending_dst = [pd[keep]]
+            self._pending_w = [pw[keep]]
+        else:
+            self._clear_pending()
+        return unmatched
 
     def refresh(self) -> int:
         dg = self.dg
         v = dg.num_vertices
         max_iters = self.max_iters or v
+        if not self._needs_full and self.dist is not None:
+            self._settle_deletions()
         if not self._needs_full and self.dist is not None \
                 and not self._pending_src:
             self.last_iters = 0  # nothing changed: skip materialization too
@@ -456,6 +572,7 @@ class IncrementalSSSP:
 
     def _clear_pending(self) -> None:
         self._pending_src, self._pending_dst, self._pending_w = [], [], []
+        self._del_src, self._del_dst, self._del_w = [], [], []
 
     def query(self) -> np.ndarray:
         self.refresh()

@@ -79,10 +79,9 @@ class IncrementalDBG:
         self.spec = spec or dbg_spec(self._mean(), num_hot_groups=num_hot_groups)
         self._spec_mean = self._mean()
         self.group_of = _assign_groups(self.degrees, self.spec.boundaries)
-        self._members: List[dict] = [dict() for _ in range(self.spec.num_groups)]
         # stable binning: original id order inside each group == batch DBG
-        for vtx in np.argsort(self.group_of, kind="stable"):
-            self._members[int(self.group_of[vtx])][int(vtx)] = None
+        self._members: List[dict] = self._bin_members(
+            np.arange(self.degrees.shape[0], dtype=np.int64))
         self.total_moved = 0
         self.total_seconds = 0.0
         self.updates_applied = 0
@@ -94,17 +93,36 @@ class IncrementalDBG:
     def num_groups(self) -> int:
         return self.spec.num_groups
 
+    def _layout_order(self) -> np.ndarray:
+        """Vertices in layout order (groups hottest-first, insertion order
+        within each group) — C-level key extraction, no per-vertex loop."""
+        parts = [np.fromiter(m.keys(), dtype=np.int64, count=len(m))
+                 for m in self._members if m]
+        order = (np.concatenate(parts) if parts
+                 else np.empty(0, dtype=np.int64))
+        if order.shape[0] != self.degrees.shape[0]:
+            raise RuntimeError(
+                f"IncrementalDBG member sets cover {order.shape[0]} of "
+                f"{self.degrees.shape[0]} vertices")
+        return order
+
+    def _bin_members(self, order: np.ndarray) -> List[dict]:
+        """Split ``order`` (already in desired intra-group order) into per-
+        group insertion-ordered member dicts via one vectorized pass."""
+        groups = self.group_of[order]
+        counts = np.bincount(groups, minlength=self.spec.num_groups)
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        sort = np.argsort(groups, kind="stable")
+        by_group = order[sort]
+        return [dict.fromkeys(by_group[offs[g]:offs[g + 1]].tolist())
+                for g in range(self.spec.num_groups)]
+
     # -- queries --------------------------------------------------------------
     def current_mapping(self) -> np.ndarray:
         """Full permutation M[v] = new id, groups laid out hottest-first."""
         n = self.degrees.shape[0]
         mapping = np.empty(n, dtype=np.int64)
-        pos = 0
-        for members in self._members:
-            for vtx in members:
-                mapping[vtx] = pos
-                pos += 1
-        assert pos == n
+        mapping[self._layout_order()] = np.arange(n, dtype=np.int64)
         return mapping
 
     def pure_groups(self) -> np.ndarray:
@@ -168,19 +186,11 @@ class IncrementalDBG:
     def _rebuild(self):
         """Boundary drift: new spec from the current mean, stable re-bin in
         the CURRENT layout order (DBG semantics relative to the live layout)."""
+        order = self._layout_order()
         self.spec = dbg_spec(self._mean(), num_hot_groups=self.num_hot_groups)
         self._spec_mean = self._mean()
-        order = np.empty(self.degrees.shape[0], dtype=np.int64)
-        pos = 0
-        for members in self._members:
-            for vtx in members:
-                order[pos] = vtx
-                pos += 1
         old_groups = self.group_of.copy()
-        new_groups_full = _assign_groups(self.degrees, self.spec.boundaries)
-        self._members = [dict() for _ in range(self.spec.num_groups)]
-        for vtx in order.tolist():
-            self._members[int(new_groups_full[vtx])][vtx] = None
-        self.group_of = new_groups_full
-        changed = np.where(old_groups != new_groups_full)[0]
-        return changed, old_groups[changed], new_groups_full[changed]
+        self.group_of = _assign_groups(self.degrees, self.spec.boundaries)
+        self._members = self._bin_members(order)
+        changed = np.where(old_groups != self.group_of)[0]
+        return changed, old_groups[changed], self.group_of[changed]

@@ -27,19 +27,41 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from ..cachesim import mpka, property_trace, scaled_hierarchy, stack_distances, to_blocks
+from ..cachesim import (DEFAULT_TRACE_LEN, mpka, property_trace,
+                        scaled_hierarchy, stack_distances, to_blocks)
 from ..graph import csr
 from .delta import ApplyResult, DeltaGraph
 from .incremental import IncrementalPageRank, IncrementalSSSP
 from .regroup import IncrementalDBG, RemapDelta
 
-__all__ = ["StreamConfig", "StreamService", "IngestStats"]
+__all__ = ["StreamConfig", "StreamService", "IngestStats", "layout_mpka"]
+
+
+def layout_mpka(g: csr.Graph, mapping: Optional[np.ndarray] = None,
+                levels=None, mode: str = "pull",
+                max_len: int = DEFAULT_TRACE_LEN) -> Dict[str, float]:
+    """MPKA of ``g`` under ``mapping`` (None = original ids).
+
+    The single trace-to-MPKA recipe (relabel → property trace → blocks →
+    stack distances → MPKA) shared by ``StreamService.locality`` and the
+    churn benchmark, so the trace cap and pipeline can't desynchronize.
+    """
+    g2 = g if mapping is None else csr.relabel(g, mapping)
+    if levels is None:
+        levels = scaled_hierarchy(g.num_vertices)
+    tr = to_blocks(property_trace(g2, mode, max_len=max_len))
+    return mpka(stack_distances(tr), levels)
 
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
     compact_threshold: float = 0.25
     regroup_every: int = 1  # batches between regroup passes; 0 = never
+    # LRU cap on live IncrementalSSSP instances: every retained root pays
+    # O(batch) ingest work per update batch and buffers pending edges until
+    # its next query, so unbounded roots would leak memory and ingest time
+    # in a long-lived service.  Evicted roots just re-solve on next query.
+    max_sssp_roots: int = 8
     hysteresis: float = 0.25
     spec_drift_tol: float = 0.2
     damping: float = 0.85
@@ -77,8 +99,10 @@ class StreamService:
         self.compactions = 0
         self.history: List[IngestStats] = []
         self.remap_deltas: List[RemapDelta] = []
-        # vertices touched since the last regroup pass (regroup_every > 1
-        # must not drop degree updates from the skipped batches)
+        # batch SOURCES since the last regroup pass (regroup_every > 1 must
+        # not drop degree updates from skipped batches; destination-only
+        # vertices never change out-degree, so the regrouper — which bins on
+        # out-degree — need not see them)
         self._touched_since_regroup: set = set()
 
     # -- ingest ---------------------------------------------------------------
@@ -95,7 +119,7 @@ class StreamService:
 
         regroup_s, moved = 0.0, 0
         if self.regrouper is not None:
-            self._touched_since_regroup.update(result.touched.tolist())
+            self._touched_since_regroup.update(result.cand_sources.tolist())
             if (self.batches_applied % self.config.regroup_every == 0
                     and self._touched_since_regroup):
                 touched = np.fromiter(self._touched_since_regroup,
@@ -127,9 +151,13 @@ class StreamService:
 
     def sssp(self, root: int) -> np.ndarray:
         root = int(root)
-        if root not in self._sssp:
-            self._sssp[root] = IncrementalSSSP(self.dg, root)
-        return self._sssp[root].query()
+        issp = self._sssp.pop(root, None)
+        if issp is None:
+            issp = IncrementalSSSP(self.dg, root)
+        self._sssp[root] = issp  # re-insert: dict order tracks recency
+        while len(self._sssp) > max(1, self.config.max_sssp_roots):
+            self._sssp.pop(next(iter(self._sssp)))
+        return issp.query()
 
     def current_mapping(self) -> Optional[np.ndarray]:
         return (self.regrouper.current_mapping()
@@ -140,7 +168,7 @@ class StreamService:
 
     # -- the cachesim hook ----------------------------------------------------
     def locality(self, mode: str = "pull",
-                 max_len: int = 1_500_000) -> Dict[str, Dict[str, float]]:
+                 max_len: int = DEFAULT_TRACE_LEN) -> Dict[str, Dict[str, float]]:
         """MPKA of the current graph: original ids vs. the live DBG mapping.
 
         Measures locality decay under churn (the more updates applied without
@@ -149,12 +177,8 @@ class StreamService:
         """
         g = self.snapshot()
         levels = scaled_hierarchy(g.num_vertices)
-        out = {}
-        layouts = {"identity": g}
+        out = {"identity": layout_mpka(g, None, levels, mode, max_len)}
         if self.regrouper is not None:
-            layouts["incremental_dbg"] = csr.relabel(
-                g, self.regrouper.current_mapping(), name=g.name + "+idbg")
-        for label, g2 in layouts.items():
-            tr = to_blocks(property_trace(g2, mode, max_len=max_len))
-            out[label] = mpka(stack_distances(tr), levels)
+            out["incremental_dbg"] = layout_mpka(
+                g, self.regrouper.current_mapping(), levels, mode, max_len)
         return out

@@ -241,6 +241,81 @@ def test_incremental_sssp_deletion_of_used_edge_recomputes(weighted_base):
     np.testing.assert_allclose(got[fin], ref[fin], rtol=1e-5)
 
 
+def test_incremental_sssp_delete_of_pending_insert_stays_exact():
+    """Regression: an edge inserted in one batch and deleted in a later batch
+    (no refresh between), whose destination was unreachable at the last
+    refresh, must not leak a finite distance through the tombstoned edge."""
+    g = csr.from_edges(np.array([0]), np.array([1]), 3, name="chain")
+    dg = DeltaGraph(g)
+    issp = IncrementalSSSP(dg, 0)
+    np.testing.assert_allclose(issp.query(), [0.0, 1.0, np.inf])
+    issp.ingest(dg.apply(add_src=[1], add_dst=[2]))
+    issp.ingest(dg.apply(del_src=[1], del_dst=[2]))
+    np.testing.assert_allclose(issp.query(), [0.0, 1.0, np.inf])
+    assert issp.full_recomputes == 0
+
+
+def test_incremental_sssp_same_batch_insert_delete_stays_exact():
+    """Same leak, single batch: apply() lets a deletion target an edge the
+    very same batch inserted."""
+    g = csr.from_edges(np.array([0]), np.array([1]), 3, name="chain")
+    dg = DeltaGraph(g)
+    issp = IncrementalSSSP(dg, 0)
+    issp.query()
+    issp.ingest(dg.apply(add_src=[1], add_dst=[2], del_src=[1], del_dst=[2]))
+    np.testing.assert_allclose(issp.query(), [0.0, 1.0, np.inf])
+    assert issp.full_recomputes == 0
+
+
+def test_incremental_sssp_delete_with_surviving_pending_twin():
+    """Deleting one of two identical (src, dst, w) parallel edges — base copy
+    killed, pending copy alive — must keep the path and skip the recompute."""
+    g = csr.from_edges(np.array([0]), np.array([1]), 3,
+                       weights=np.array([1.0], np.float32), name="chain-w")
+    dg = DeltaGraph(g)
+    issp = IncrementalSSSP(dg, 0)
+    issp.query()
+    issp.ingest(dg.apply(add_src=[0], add_dst=[1], add_w=[1.0]))
+    issp.ingest(dg.apply(del_src=[0], del_dst=[1]))
+    es, ed, _ = dg.alive_edges()
+    assert list(zip(es.tolist(), ed.tolist())) == [(0, 1)]
+    np.testing.assert_allclose(issp.query(), [0.0, 1.0, np.inf])
+    assert issp.full_recomputes == 0
+
+
+def test_incremental_sssp_interleaved_insert_delete_matches_oracle(
+        weighted_base):
+    """Churn where deletions target not-yet-refreshed inserts must stay exact
+    (insertion batches and deletion batches interleave without queries)."""
+    dg = DeltaGraph(weighted_base)
+    issp = IncrementalSSSP(dg, 0)
+    issp.query()
+    rng = np.random.default_rng(8)
+    v = dg.num_vertices
+    for _ in range(3):
+        k = 60
+        a_s = rng.integers(0, v, k)
+        a_d = rng.integers(0, v, k)
+        a_w = rng.uniform(1, 16, k).astype(np.float32)
+        issp.ingest(dg.apply(add_src=a_s, add_dst=a_d, add_w=a_w))
+        idx = rng.choice(k, size=20, replace=False)
+        issp.ingest(dg.apply(del_src=a_s[idx], del_dst=a_d[idx]))
+        got = issp.query()
+        ref = np.asarray(sssp(to_arrays(dg.snapshot()), jnp.int32(0))[0])
+        assert np.array_equal(np.isinf(got), np.isinf(ref))
+        fin = np.isfinite(ref)
+        np.testing.assert_allclose(got[fin], ref[fin], rtol=1e-5)
+
+
+def test_sssp_root_cache_is_bounded_and_eviction_is_transparent(weighted_base):
+    svc = StreamService(weighted_base,
+                        StreamConfig(max_sssp_roots=4, regroup_every=0))
+    refs = {r: svc.sssp(r).copy() for r in range(10)}
+    assert len(svc._sssp) == 4  # oldest roots evicted
+    for r in (0, 9):  # evicted and retained alike answer correctly
+        np.testing.assert_allclose(svc.sssp(r), refs[r], rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # Incremental DBG (the reordering layer)
 # ---------------------------------------------------------------------------
