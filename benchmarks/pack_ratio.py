@@ -1,0 +1,149 @@
+"""Packed-storage benchmark → BENCH_pack.json.
+
+Quantifies what ``repro.pack`` buys on the Table IX/X registry graphs:
+
+  * **bytes/edge** of the packed layout under {original, DBG, Gorder-lite}
+    orderings vs the flat CSR baseline — the ordering↔compressibility
+    coupling (Floros et al.): skew-aware orderings shrink the varint bytes
+    because hub ids become small; on graphs whose ORIGINAL ordering is
+    already community-structured (lj/wl/fr/mp/road) the original ids are
+    themselves compression-friendly, which the cells report honestly;
+  * **encode / decode throughput** (edges/s of ``pack_graph`` / ``unpack``);
+  * **MPKA** of a storage-aware traversal trace (per-row metadata + per-edge
+    index + per-edge property accesses) for {flat original, flat DBG,
+    DBG+pack} at equal cache size — the footprint reduction in cache terms;
+  * **GRASP-lite**: DBG+pack under plain LRU vs with the hot segment's
+    property blocks pinned in the LLC (``cachesim.mpka_pinned``).
+
+Usage:
+  PYTHONPATH=src python benchmarks/pack_ratio.py [--scale small]
+      [--datasets kr,lj,uni,...|all] [--out BENCH_pack.json] [--smoke]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+from repro.cachesim import scaled_hierarchy
+from repro.core import reorder
+from repro.core.gorder_lite import gorder_lite
+from repro.graph import csr as csr_mod
+from repro.graph import datasets
+from repro.pack import flat_csr_nbytes, pack_graph
+from repro.stream.service import layout_mpka, packed_mpka
+
+ORDERINGS = ("original", "dbg", "gorder_lite")
+
+
+def _mapping(g, ordering: str) -> np.ndarray:
+    if ordering == "original":
+        return reorder.identity(g.out_degrees()).mapping
+    if ordering == "dbg":
+        return reorder.dbg(g.out_degrees()).mapping
+    if ordering == "gorder_lite":
+        return gorder_lite(g).mapping
+    raise KeyError(ordering)
+
+
+def bench_dataset(key: str, scale: str, seed: int = 0) -> dict:
+    g = datasets.load(key, scale, seed=seed)
+    levels = scaled_hierarchy(g.num_vertices)
+    cell = {
+        "dataset": key,
+        "vertices": g.num_vertices,
+        "edges": g.num_edges,
+        "flat_bytes_per_edge": flat_csr_nbytes(g) / (2 * g.num_edges),
+        "orderings": {},
+    }
+    packed_dbg = None
+    g_dbg = None
+    for ordering in ORDERINGS:
+        g2 = csr_mod.relabel(g, _mapping(g, ordering))
+        pg = pack_graph(g2)
+        t0 = time.perf_counter()
+        gu = pg.unpack()
+        decode_s = time.perf_counter() - t0
+        assert gu.num_edges == g2.num_edges
+        cell["orderings"][ordering] = {
+            "packed_bytes_per_edge": pg.bytes_per_edge(),
+            "packing_factor": pg.in_adj.packing_factor,
+            "hot_edges_frac": pg.in_adj.hot_edges / max(1, pg.num_edges),
+            "encode_edges_per_second":
+                2 * pg.num_edges / max(1e-12, pg.pack_seconds),
+            "decode_edges_per_second":
+                2 * pg.num_edges / max(1e-12, decode_s),
+            "nbytes": pg.nbytes(),
+        }
+        if ordering == "dbg":
+            packed_dbg, g_dbg = pg, g2
+
+    # storage-aware MPKA at equal cache size: {baseline, DBG, DBG+pack},
+    # DBG+pack additionally under the GRASP-lite pinned-hot policy
+    cell["mpka_flat_original"] = layout_mpka(
+        g, None, levels, include_structure=True)
+    cell["mpka_flat_dbg"] = layout_mpka(
+        g_dbg, None, levels, include_structure=True)
+    cell["mpka_packed_dbg"] = packed_mpka(packed_dbg, levels, pin_hot=True)
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="all",
+                    help="comma list or 'all' (Table IX/X registry)")
+    ap.add_argument("--scale", default="small")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: test scale, kr+road only")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_pack.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.scale, args.datasets = "test", "kr,road"
+    keys = (list(datasets.REGISTRY) if args.datasets == "all"
+            else args.datasets.split(","))
+
+    out = {"scale": args.scale, "cells": []}
+    for key in keys:
+        cell = bench_dataset(key, args.scale)
+        out["cells"].append(cell)
+        o = cell["orderings"]
+        be = {k: o[k]["packed_bytes_per_edge"] for k in ORDERINGS}
+        print(f"[pack_ratio] {key}: flat {cell['flat_bytes_per_edge']:.2f} "
+              f"B/e | packed orig {be['original']:.2f} dbg {be['dbg']:.2f} "
+              f"gorder {be['gorder_lite']:.2f} | L3 mpka flat-orig "
+              f"{cell['mpka_flat_original']['l3_mpka']:.1f} flat-dbg "
+              f"{cell['mpka_flat_dbg']['l3_mpka']:.1f} dbg+pack "
+              f"{cell['mpka_packed_dbg']['l3_mpka']:.1f} pinned "
+              f"{cell['mpka_packed_dbg']['l3_pinned_mpka']:.1f} | "
+              f"enc {o['dbg']['encode_edges_per_second']/1e6:.1f} Me/s "
+              f"dec {o['dbg']['decode_edges_per_second']/1e6:.1f} Me/s",
+              flush=True)
+
+    # headline aggregates (the ISSUE 3 acceptance couple)
+    skewed = [c for c in out["cells"]
+              if c["dataset"] not in ("road", "uni")]
+    if skewed:
+        out["summary"] = {
+            "dbg_vs_original_bytes_ratio_mean": float(np.mean(
+                [c["orderings"]["dbg"]["packed_bytes_per_edge"]
+                 / c["orderings"]["original"]["packed_bytes_per_edge"]
+                 for c in skewed])),
+            "pack_vs_flat_dbg_l3_ratio_mean": float(np.mean(
+                [c["mpka_packed_dbg"]["l3_mpka"]
+                 / max(1e-12, c["mpka_flat_dbg"]["l3_mpka"])
+                 for c in out["cells"]])),
+        }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[pack_ratio] wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,10 +16,16 @@ For each (dataset, batch size, layout policy) cell:
     incrementally-maintained mapping vs. a fresh batch DBG mapping vs.
     identity.
 
+``--sweep-h`` additionally sweeps the regrouper's hysteresis band (the
+streaming analogue of the paper's Table VII sensitivity): per dataset, how
+many vertices move per batch and what the FINAL layout's MPKA is as ``h``
+widens — the churn-vs-locality dial, folded into BENCH_stream.json as the
+``hysteresis_sweep`` section.
+
 Usage:
   PYTHONPATH=src python benchmarks/stream_churn.py [--scale small]
       [--datasets kr,uni] [--batch-sizes 256,1024,4096] [--batches 10]
-      [--out BENCH_stream.json] [--smoke]
+      [--sweep-h 0,0.125,0.25,0.5,1.0] [--out BENCH_stream.json] [--smoke]
 """
 import argparse
 import json
@@ -154,12 +160,50 @@ def bench_cell(key: str, scale: str, policy: str, batch_size: int,
     return cell
 
 
+def sweep_hysteresis(key: str, scale: str, batch_size: int, num_batches: int,
+                     h_values, seed: int = 3):
+    """Moved-vertices/batch vs final MPKA as the hysteresis band varies."""
+    cells = []
+    for h in h_values:
+        g = datasets.load(key, scale, seed=seed)
+        svc = StreamService(g, StreamConfig(regroup_every=1, hysteresis=h))
+        stream = ChurnStream(g, seed=seed)
+        moved, regroup_s = [], []
+        for _ in range(num_batches):
+            a_s, a_d, d_s, d_d = stream.next_batch(svc.dg, batch_size)
+            st = svc.ingest(add_src=a_s, add_dst=a_d,
+                            del_src=d_s, del_dst=d_d)
+            moved.append(st.moved_vertices)
+            regroup_s.append(st.regroup_seconds)
+        final = svc.snapshot()
+        levels = scaled_hierarchy(final.num_vertices)
+        m = layout_mpka(final, svc.current_mapping(), levels)
+        cell = {
+            "dataset": key,
+            "batch_size": batch_size,
+            "num_batches": num_batches,
+            "hysteresis": h,
+            "moved_vertices_per_batch": float(np.mean(moved)),
+            "total_moved": int(np.sum(moved)),
+            "regroup_seconds_per_batch": float(np.mean(regroup_s)),
+            "mpka_final": m,
+        }
+        cells.append(cell)
+        print(f"[stream_churn] sweep-h {key} h={h}: "
+              f"{cell['moved_vertices_per_batch']:.1f} moved/batch, "
+              f"final L3 mpka {m['l3_mpka']:.1f}", flush=True)
+    return cells
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", default="kr,uni")
     ap.add_argument("--scale", default="small")
     ap.add_argument("--batch-sizes", default="256,1024,4096")
     ap.add_argument("--batches", type=int, default=10)
+    ap.add_argument("--sweep-h", default=None,
+                    help="comma list of hysteresis values; adds the "
+                         "hysteresis_sweep section (first batch size only)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: test scale, 2 batches, 1 size")
     ap.add_argument("--out", default=os.path.join(
@@ -189,6 +233,14 @@ def main() -> None:
                             f" vs full {cell['mpka_full_dbg']['l3_mpka']:.1f}"
                             f" vs none {cell['mpka_identity']['l3_mpka']:.1f}")
                 print(msg, flush=True)
+    if args.sweep_h:
+        h_values = [float(x) for x in args.sweep_h.split(",")]
+        out["hysteresis_sweep"] = []
+        for key in args.datasets.split(","):
+            # largest batch size: enough degree churn per batch to exercise
+            # the band (small batches rarely push a vertex past any margin)
+            out["hysteresis_sweep"].extend(sweep_hysteresis(
+                key, args.scale, max(batch_sizes), args.batches, h_values))
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"[stream_churn] wrote {args.out}", flush=True)

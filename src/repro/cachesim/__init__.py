@@ -4,8 +4,16 @@ from .simulator import (  # noqa: F401
     amat_cycles,
     miss_curve,
     mpka,
+    mpka_pinned,
     scaled_hierarchy,
     stack_distances,
     stack_distances_np,
 )
-from .trace import DEFAULT_TRACE_LEN, property_trace, to_blocks  # noqa: F401
+from .trace import (  # noqa: F401
+    DEFAULT_TRACE_LEN,
+    STRUCT_REGION,
+    flat_structure,
+    interleave_structure,
+    property_trace,
+    to_blocks,
+)

@@ -26,6 +26,7 @@ __all__ = [
     "CacheLevels",
     "scaled_hierarchy",
     "mpka",
+    "mpka_pinned",
     "amat_cycles",
 ]
 
@@ -174,6 +175,46 @@ def mpka(distances: np.ndarray, levels: CacheLevels) -> Dict[str, float]:
         "l2_mpka": 1000.0 * m[1] / n,
         "l3_mpka": 1000.0 * m[2] / n,
     }
+
+
+def mpka_pinned(
+    block_trace: np.ndarray,
+    pinned_blocks: np.ndarray,
+    levels: CacheLevels,
+) -> Dict[str, float]:
+    """GRASP-lite (Faldu et al.): a pinned hot region bypasses LLC demotion.
+
+    Domain-specialized cache management, reduced to its stack-distance
+    essence: the pinned blocks (the packed layout's hot segment) are
+    permanently resident in the LLC — they miss only on first touch and
+    never age out — while every other block competes under plain LRU for
+    the remaining ``l3 - |pinned|`` blocks.  Pinned accesses do not disturb
+    the LRU stack of the unpinned stream (they bypass it), so the unpinned
+    stream's stack distances are computed on its own subtrace.
+
+    Pinning is refused (plain LRU numbers returned) when the touched pinned
+    footprint exceeds half the LLC — GRASP's own conservatism: pinning a
+    region comparable to the cache would just thrash the tail.
+
+    Returns the plain per-level MPKA plus ``l3_pinned_mpka`` and the number
+    of resident ``pinned_blocks``.
+    """
+    trace = np.asarray(block_trace, dtype=np.int64)
+    full = mpka(stack_distances(trace), levels)
+    is_pinned = np.isin(trace, np.asarray(pinned_blocks, dtype=np.int64))
+    touched = np.unique(trace[is_pinned])
+    out = dict(full)
+    if touched.size == 0 or touched.size > levels.l3_blocks // 2:
+        out["l3_pinned_mpka"] = full["l3_mpka"]
+        out["pinned_blocks"] = 0
+        return out
+    sub = trace[~is_pinned]
+    d = stack_distances(sub)
+    eff = np.array([levels.l3_blocks - touched.size])
+    misses = int(touched.size) + int(miss_curve(d, eff)[0])
+    out["l3_pinned_mpka"] = 1000.0 * misses / max(1, trace.shape[0])
+    out["pinned_blocks"] = int(touched.size)
+    return out
 
 
 def amat_cycles(distances: np.ndarray, levels: CacheLevels) -> float:

@@ -15,7 +15,24 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["CSR", "Graph", "from_edges", "relabel", "validate"]
+__all__ = ["CSR", "Graph", "from_edges", "ragged_offsets", "relabel",
+           "validate"]
+
+
+def ragged_offsets(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Concatenated [starts[i], starts[i] + counts[i]) index ranges.
+
+    The segmented-arange primitive behind every vectorized CSR-row gather
+    (adjacency slicing, ELL packing, varint block scatter); shared so the
+    subsystems don't each carry a private copy.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    return np.repeat(np.asarray(starts, dtype=np.int64), counts) + (
+        np.arange(total, dtype=np.int64)
+        - np.repeat(np.cumsum(counts) - counts, counts))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the packed-hot-segment SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["hot_spmv_ref"]
+
+
+def hot_spmv_ref(
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    deg: jnp.ndarray,
+    w: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """y[r] = sum_{j < deg[r]} x[idx[r, j]] (* w[r, j]) — degree-masked ELL."""
+    r, width = idx.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (r, width), 1)
+    vals = x[idx.astype(jnp.int32)]
+    if w is not None:
+        vals = vals * w
+    return jnp.sum(jnp.where(cols < deg[:, None], vals, 0.0), axis=1)

@@ -1,0 +1,28 @@
+"""repro.pack — hot/cold segmented, compressed CSR storage (ISSUE 3).
+
+The storage layer under the paper's cache argument: a DBG-grouped graph is
+packed into a fixed-stride **hot segment** (the paper's packing of high-reuse
+vertices made physical) and a delta + group-varint compressed **cold tail**
+(the ordering↔compressibility coupling of Floros et al.), and the Ligra apps
+run over it without round-tripping through flat CSR.
+"""
+from . import codec, engine, layout  # noqa: F401
+from .codec import GroupVarintLists, decode_all, decode_block, encode_values  # noqa: F401
+from .engine import (  # noqa: F401
+    PackedArrays,
+    bc_packed,
+    edge_map_pull_packed,
+    edge_map_push_packed,
+    packed_arrays,
+    pagerank_packed,
+    sssp_packed,
+)
+from .layout import (  # noqa: F401
+    ColdSegment,
+    HotGroup,
+    PackedAdjacency,
+    PackedGraph,
+    flat_csr_nbytes,
+    pack_adjacency,
+    pack_graph,
+)

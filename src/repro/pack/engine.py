@@ -1,0 +1,368 @@
+"""Run the Ligra-style apps directly over a ``PackedGraph``.
+
+The adapter mirrors ``apps.engine``'s two primitives over the packed layout:
+the **hot segment** is traversed in place (fixed-stride slot tables, regular
+gathers — never expanded to edge lists), and the **cold segment** is decoded
+once into a per-direction tile cache at ``packed_arrays`` time (the decoded-
+tile path; the compressed bytes stay the storage of record).
+
+Bit-identity contract (tested): PR, SSSP and BC over ``PackedArrays`` return
+bit-identical results to the flat engine running on ``pg.unpack()``.  The
+mechanism: every per-destination reduction uses the same segmented fold over
+the same canonical (ascending) per-row neighbor order — hot padding slots
+contribute the reduction's exact identity element, and ``x + 0.0`` / ``min(x,
+inf)`` / ``max(x, -inf)`` preserve bits — so each row's fold is the same
+expression the flat ``segment_sum`` evaluates.  Push-mode ``sum`` is the one
+exception (per-destination fold order differs across segments); min/max
+pushes (SSSP's relaxation) are exactly associative and stay bit-identical.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layout import PackedAdjacency, PackedGraph
+
+__all__ = [
+    "HotDev",
+    "ColdDev",
+    "PackedArrays",
+    "packed_arrays",
+    "edge_map_pull_packed",
+    "edge_map_push_packed",
+    "pagerank_packed",
+    "sssp_packed",
+    "bc_packed",
+]
+
+_NEUTRAL = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf, "or": 0.0}
+
+
+class HotDev(NamedTuple):
+    """Device view of one hot group's slot table (still packed)."""
+
+    rows: jnp.ndarray  # (R,) int32 owning vertex ids
+    deg: jnp.ndarray  # (R,) int32
+    idx: jnp.ndarray  # (R, W) int32 (upcast from the storage dtype)
+    w: Optional[jnp.ndarray]  # (R, W) f32 or None
+
+
+class ColdDev(NamedTuple):
+    """Decoded cold tiles in edge-parallel form (row-major, sorted rows)."""
+
+    rows: jnp.ndarray  # (C,) int32 owning vertex ids
+    owners: jnp.ndarray  # (E,) int32 owning vertex id per edge
+    seg: jnp.ndarray  # (E,) int32 local row index per edge (ascending)
+    neigh: jnp.ndarray  # (E,) int32 neighbor ids
+    w: Optional[jnp.ndarray]  # (E,) f32 or None
+
+
+class PackedArrays(NamedTuple):
+    in_hot: Tuple[HotDev, ...]
+    in_cold: ColdDev
+    out_hot: Tuple[HotDev, ...]
+    out_cold: ColdDev
+    in_deg: jnp.ndarray  # (V,) int32
+    out_deg: jnp.ndarray  # (V,) int32
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.in_deg.shape[0])
+
+
+def _hot_dev(adj: PackedAdjacency) -> Tuple[HotDev, ...]:
+    out = []
+    for h in adj.hot:
+        if h.num_rows == 0 or h.stride == 0:
+            continue
+        out.append(HotDev(
+            rows=jnp.asarray(h.rows, jnp.int32),
+            deg=jnp.asarray(h.deg, jnp.int32),
+            idx=jnp.asarray(h.idx.astype(np.int32)),
+            w=None if h.w is None else jnp.asarray(h.w)))
+    return tuple(out)
+
+
+def _cold_dev(adj: PackedAdjacency) -> ColdDev:
+    cdeg = adj.cold.deg.astype(np.int64)
+    neigh = adj.cold.neighbors()
+    seg = np.repeat(np.arange(adj.cold.num_rows, dtype=np.int32),
+                    cdeg)
+    owners = np.repeat(adj.cold.rows.astype(np.int32), cdeg)
+    return ColdDev(
+        rows=jnp.asarray(adj.cold.rows, jnp.int32),
+        owners=jnp.asarray(owners),
+        seg=jnp.asarray(seg),
+        neigh=jnp.asarray(neigh, jnp.int32),
+        w=None if adj.cold.w is None else jnp.asarray(adj.cold.w))
+
+
+def packed_arrays(pg: PackedGraph) -> PackedArrays:
+    """Materialize device views: hot tables stay packed, cold tiles decode
+    once here (and only here)."""
+    return PackedArrays(
+        in_hot=_hot_dev(pg.in_adj),
+        in_cold=_cold_dev(pg.in_adj),
+        out_hot=_hot_dev(pg.out_adj),
+        out_cold=_cold_dev(pg.out_adj),
+        in_deg=jnp.asarray(pg.in_adj.degrees(), jnp.int32),
+        out_deg=jnp.asarray(pg.out_adj.degrees(), jnp.int32),
+    )
+
+
+def _segment(vals, seg, num, reduce):
+    if reduce == "sum":
+        return jax.ops.segment_sum(vals, seg, num_segments=num,
+                                   indices_are_sorted=True)
+    if reduce == "min":
+        return jax.ops.segment_min(vals, seg, num_segments=num,
+                                   indices_are_sorted=True)
+    if reduce in ("max", "or"):
+        return jax.ops.segment_max(vals, seg, num_segments=num,
+                                   indices_are_sorted=True)
+    raise ValueError(reduce)
+
+
+def _combine(out, rows, ys, reduce):
+    # rows are disjoint across hot groups + cold, and out starts at the
+    # reduction identity, so this scatter preserves each row's fold bits
+    if reduce == "sum":
+        return out.at[rows].add(ys)
+    if reduce == "min":
+        return out.at[rows].min(ys)
+    return out.at[rows].max(ys)
+
+
+def edge_map_pull_packed(
+    pa: PackedArrays,
+    prop: jnp.ndarray,
+    *,
+    reduce: str = "sum",
+    src_frontier: Optional[jnp.ndarray] = None,
+    use_weights: bool = False,
+    neutral: Optional[float] = None,
+):
+    """dst <- REDUCE over in-edges of f(prop[src]) — ``engine.edge_map_pull``
+    semantics over the packed pull direction (1-D properties)."""
+    if prop.ndim != 1:
+        raise ValueError("packed edge maps support 1-D properties")
+    if neutral is None:
+        neutral = _NEUTRAL[reduce]
+    v = pa.in_deg.shape[0]
+    out = jnp.full((v,), _NEUTRAL[reduce], dtype=prop.dtype)
+
+    for h in pa.in_hot:
+        r, width = h.idx.shape
+        vals = prop[h.idx]  # regular fixed-stride gather — still packed
+        if use_weights:
+            vals = vals + h.w
+        cols = jax.lax.broadcasted_iota(jnp.int32, (r, width), 1)
+        mask = cols < h.deg[:, None]
+        if src_frontier is not None:
+            mask = mask & src_frontier[h.idx]
+        vals = jnp.where(mask, vals, neutral)
+        seg = jax.lax.broadcasted_iota(jnp.int32, (r, width), 0)
+        ys = _segment(vals.ravel(), seg.ravel(), r, reduce)
+        out = _combine(out, h.rows, ys, reduce)
+
+    c = pa.in_cold
+    if c.neigh.shape[0]:
+        vals = prop[c.neigh]
+        if use_weights:
+            vals = vals + c.w
+        if src_frontier is not None:
+            vals = jnp.where(src_frontier[c.neigh], vals, neutral)
+        ys = _segment(vals, c.seg, c.rows.shape[0], reduce)
+        out = _combine(out, c.rows, ys, reduce)
+    return out
+
+
+def edge_map_push_packed(
+    pa: PackedArrays,
+    prop: jnp.ndarray,
+    *,
+    reduce: str = "min",
+    src_frontier: Optional[jnp.ndarray] = None,
+    use_weights: bool = False,
+    neutral: Optional[float] = None,
+    init: Optional[jnp.ndarray] = None,
+):
+    """dst <- REDUCE over pushes from (active) sources, packed out direction.
+
+    Padding slots push the identity element, so they can scatter unmasked.
+    min/max pushes are bit-identical to the flat engine; sum pushes agree
+    only up to reassociation (documented above).
+    """
+    if prop.ndim != 1:
+        raise ValueError("packed edge maps support 1-D properties")
+    if neutral is None:
+        neutral = _NEUTRAL[reduce]
+    v = pa.in_deg.shape[0]
+    if init is None:
+        init = jnp.full((v,), _NEUTRAL[reduce], dtype=prop.dtype)
+    out = init
+
+    def scatter(out, dst, vals):
+        if reduce == "sum":
+            return out.at[dst].add(vals)
+        if reduce == "min":
+            return out.at[dst].min(vals)
+        if reduce in ("max", "or"):
+            return out.at[dst].max(vals)
+        raise ValueError(reduce)
+
+    for h in pa.out_hot:
+        r, width = h.idx.shape
+        vals = jnp.broadcast_to(prop[h.rows][:, None], (r, width))
+        if use_weights:
+            vals = vals + h.w
+        cols = jax.lax.broadcasted_iota(jnp.int32, (r, width), 1)
+        mask = cols < h.deg[:, None]
+        if src_frontier is not None:
+            mask = mask & src_frontier[h.rows][:, None]
+        vals = jnp.where(mask, vals, neutral)
+        out = scatter(out, h.idx.ravel(), vals.ravel())
+
+    c = pa.out_cold
+    if c.neigh.shape[0]:
+        vals = prop[c.owners]
+        if use_weights:
+            vals = vals + c.w
+        if src_frontier is not None:
+            vals = jnp.where(src_frontier[c.owners], vals, neutral)
+        out = scatter(out, c.neigh, vals)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The evaluated apps, loop-for-loop equal to repro.apps over GraphArrays
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def pagerank_packed(
+    pa: PackedArrays,
+    *,
+    damping: float = 0.85,
+    max_iters: int = 64,
+    tol: float = 1e-7,
+):
+    """PageRank over packed storage — mirrors ``apps.pagerank`` exactly."""
+    v = pa.in_deg.shape[0]
+    out_deg = jnp.maximum(1, pa.out_deg).astype(jnp.float32)
+    dangling = (pa.out_deg == 0).astype(jnp.float32)
+
+    def cond(state):
+        _, it, err = state
+        return jnp.logical_and(it < max_iters, err > tol)
+
+    def body(state):
+        rank, it, _ = state
+        contrib = rank / out_deg
+        pulled = edge_map_pull_packed(pa, contrib, reduce="sum")
+        dangling_mass = jnp.sum(rank * dangling) / v
+        new = (1.0 - damping) / v + damping * (pulled + dangling_mass)
+        err = jnp.sum(jnp.abs(new - rank))
+        return new, it + 1, err
+
+    rank0 = jnp.full((v,), 1.0 / v, jnp.float32)
+    rank, iters, _ = jax.lax.while_loop(cond, body, (rank0, 0, jnp.inf))
+    return rank, iters
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def sssp_packed(pa: PackedArrays, root: jnp.ndarray, *, max_iters: int = 0):
+    """Bellman-Ford over packed storage — mirrors ``apps.sssp`` exactly."""
+    v = pa.in_deg.shape[0]
+    max_iters = max_iters or v
+
+    dist0 = jnp.full((v,), jnp.inf, jnp.float32).at[root].set(0.0)
+    frontier0 = jnp.zeros((v,), bool).at[root].set(True)
+
+    def cond(state):
+        _, frontier, it = state
+        return jnp.logical_and(it < max_iters, jnp.any(frontier))
+
+    def body(state):
+        dist, frontier, it = state
+        cand = edge_map_push_packed(
+            pa, dist, reduce="min", src_frontier=frontier,
+            use_weights=True, neutral=jnp.inf, init=dist,
+        )
+        frontier = cand < dist
+        return cand, frontier, it + 1
+
+    dist, _, iters = jax.lax.while_loop(cond, body, (dist0, frontier0, 0))
+    return dist, iters
+
+
+def _out_pull_sum(pa: PackedArrays, edge_val_fn):
+    """segment-sum over OUT-edges grouped by source (BC's backward gather):
+    ``edge_val_fn(src_ids, child_ids) -> per-edge value``."""
+    v = pa.in_deg.shape[0]
+    out = jnp.zeros((v,), jnp.float32)
+    for h in pa.out_hot:
+        r, width = h.idx.shape
+        src = jnp.broadcast_to(h.rows[:, None], (r, width))
+        vals = edge_val_fn(src, h.idx)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (r, width), 1)
+        vals = jnp.where(cols < h.deg[:, None], vals, 0.0)
+        seg = jax.lax.broadcasted_iota(jnp.int32, (r, width), 0)
+        ys = jax.ops.segment_sum(vals.ravel(), seg.ravel(), num_segments=r,
+                                 indices_are_sorted=True)
+        out = out.at[h.rows].add(ys)
+    c = pa.out_cold
+    if c.neigh.shape[0]:
+        vals = edge_val_fn(c.owners, c.neigh)
+        ys = jax.ops.segment_sum(vals, c.seg, num_segments=c.rows.shape[0],
+                                 indices_are_sorted=True)
+        out = out.at[c.rows].add(ys)
+    return out
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def bc_packed(pa: PackedArrays, root: jnp.ndarray, *, max_iters: int = 0):
+    """Brandes BC over packed storage — mirrors ``apps.bc`` exactly."""
+    v = pa.in_deg.shape[0]
+    max_iters = max_iters or v
+
+    dist0 = jnp.full((v,), -1, jnp.int32).at[root].set(0)
+    sigma0 = jnp.zeros((v,), jnp.float32).at[root].set(1.0)
+    frontier0 = jnp.zeros((v,), bool).at[root].set(True)
+
+    def fcond(state):
+        _, _, frontier, it = state
+        return jnp.logical_and(it < max_iters, jnp.any(frontier))
+
+    def fbody(state):
+        dist, sigma, frontier, it = state
+        contrib = jnp.where(frontier, sigma, 0.0)
+        sig_new = edge_map_pull_packed(pa, contrib, reduce="sum")
+        reached = sig_new > 0.0
+        fresh = jnp.logical_and(reached, dist < 0)
+        dist = jnp.where(fresh, it + 1, dist)
+        sigma = jnp.where(fresh, sig_new, sigma)
+        return dist, sigma, fresh, it + 1
+
+    dist, sigma, _, levels = jax.lax.while_loop(
+        fcond, fbody, (dist0, sigma0, frontier0, 0)
+    )
+
+    sigma_safe = jnp.maximum(sigma, 1e-30)
+
+    def bbody(level, delta):
+        def edge_val(src, child):
+            ok = dist[child] == dist[src] + 1
+            return jnp.where(ok, (1.0 + delta[child]) / sigma_safe[child], 0.0)
+
+        summed = _out_pull_sum(pa, edge_val)
+        contrib = sigma * summed
+        on_level = dist == (levels - 1 - level)
+        return jnp.where(on_level, contrib, delta)
+
+    delta = jax.lax.fori_loop(0, levels, bbody, jnp.zeros((v,), jnp.float32))
+    centrality = jnp.where(dist >= 0, delta, 0.0).at[root].set(0.0)
+    return centrality, dist, levels

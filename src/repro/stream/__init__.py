@@ -31,4 +31,5 @@ from .service import (  # noqa: F401
     StreamConfig,
     StreamService,
     layout_mpka,
+    packed_mpka,
 )

@@ -35,7 +35,26 @@ import numpy as np
 
 from ..graph import csr
 
-__all__ = ["ApplyResult", "DeltaGraph"]
+__all__ = ["ApplyResult", "DeltaGraph", "occurrence_rank"]
+
+
+def occurrence_rank(inv: np.ndarray) -> np.ndarray:
+    """Rank of each element within its key group (0 for a key's first
+    occurrence in array order, 1 for its second, ...).
+
+    The per-key occurrence-claim primitive shared by the deletion staging
+    below and ``IncrementalSSSP._scrub_pending``.
+    """
+    order = np.argsort(inv, kind="stable")
+    sorted_inv = inv[order]
+    starts = np.flatnonzero(np.r_[True, np.diff(sorted_inv) != 0])
+    counts = np.diff(np.r_[starts, inv.size])
+    ranks = np.empty(inv.size, dtype=np.int64)
+    ranks[order] = np.arange(inv.size) - np.repeat(starts, counts)
+    return ranks
+
+
+_ragged = csr.ragged_offsets
 
 
 @dataclasses.dataclass(frozen=True)
@@ -291,13 +310,20 @@ class DeltaGraph:
         # --- stage deletions (no mutation yet: failed batches are no-ops) ----
         # Deletions may target base edges or edges inserted by THIS batch, so
         # staging happens against base ∪ extras ∪ pending inserts.
+        #
+        # The claim is grouped by key: every key claims the FIRST alive
+        # position(s) among its candidates (base candidates in key-sorted
+        # order first, then extras ∪ pending).  Keys requested ONCE in the
+        # batch — the overwhelming case — are claimed in one vectorized pass
+        # (the ``occurrence_rank`` pattern shared with
+        # ``IncrementalSSSP._scrub_pending``); only keys named several times
+        # in one batch fall back to the per-request loop, because their
+        # claims may straddle the base/extras boundary request by request.
         removed_w = np.ones(d_src.shape[0], np.float32)
         kill_base: list = []
         kill_extra: list = []
         if d_src.size:
             keys = d_src * np.int64(v) + d_dst
-            lo = np.searchsorted(self._base_key_sorted, keys, side="left")
-            hi = np.searchsorted(self._base_key_sorted, keys, side="right")
             ne = self._n_extra
             ex_keys = self._ex_src[:ne] * np.int64(v) + self._ex_dst[:ne]
             pend_keys = a_src * np.int64(v) + a_dst
@@ -306,10 +332,64 @@ class DeltaGraph:
             ex_sorted = all_ex_keys[ex_order]
             ex_alive = np.concatenate(
                 [self._ex_alive[:ne], np.ones(k, dtype=bool)])
-            staged_base: set = set()
-            for i in range(d_src.shape[0]):
+
+            uk, inv = np.unique(keys, return_inverse=True)
+            need = np.bincount(inv)
+            single = need[inv] == 1  # mask over deletion requests
+
+            def _first_alive(sk, sorted_keys, order, alive_flags):
+                """First alive candidate position per key (vectorized).
+
+                Returns (found mask over sk, claimed position per found key
+                aligned with sk[found]).  Candidates of one key are visited
+                in ``order``'s key-sorted stable order — identical to the
+                scan order of the per-request loop below.
+                """
+                lo = np.searchsorted(sorted_keys, sk, side="left")
+                counts = np.searchsorted(sorted_keys, sk, side="right") - lo
+                owner = np.repeat(
+                    np.arange(sk.shape[0], dtype=np.int64), counts)
+                pos = order[_ragged(lo, counts)]
+                live = alive_flags[pos]
+                first = occurrence_rank(owner[live]) == 0
+                found = np.zeros(sk.shape[0], dtype=bool)
+                found[owner[live][first]] = True
+                return found, pos[live][first]
+
+            if np.any(single):
+                didx = np.flatnonzero(single)
+                # align request order with sorted-unique key order
+                didx = didx[np.argsort(keys[didx], kind="stable")]
+                sk = keys[didx]
+                b_found, b_pos = _first_alive(
+                    sk, self._base_key_sorted, self._base_key_order,
+                    self.base_alive)
+                kill_base.extend(b_pos.tolist())
+                if self._base_w is not None:
+                    removed_w[didx[b_found]] = self._base_w[b_pos]
+                if not b_found.all():
+                    rest = np.flatnonzero(~b_found)
+                    e_found, e_pos = _first_alive(
+                        sk[rest], ex_sorted, ex_order, ex_alive)
+                    if not e_found.all():
+                        i = int(didx[rest[np.flatnonzero(~e_found)[0]]])
+                        raise KeyError(
+                            f"edge ({d_src[i]}, {d_dst[i]}) not present")
+                    kill_extra.extend(e_pos.tolist())
+                    ex_alive[e_pos] = False
+                    ew = np.ones(e_pos.shape[0], np.float32)
+                    in_buf = e_pos < ne
+                    ew[in_buf] = self._ex_w[e_pos[in_buf]]
+                    if w_add is not None:
+                        ew[~in_buf] = w_add[e_pos[~in_buf] - ne]
+                    removed_w[didx[rest]] = ew
+
+            staged_base: set = set(kill_base)
+            for i in np.flatnonzero(~single):
                 killed = False
-                for j in range(lo[i], hi[i]):
+                jl = np.searchsorted(self._base_key_sorted, keys[i], "left")
+                jr = np.searchsorted(self._base_key_sorted, keys[i], "right")
+                for j in range(jl, jr):
                     pos = int(self._base_key_order[j])
                     if self.base_alive[pos] and pos not in staged_base:
                         staged_base.add(pos)
@@ -357,14 +437,14 @@ class DeltaGraph:
 
         # --- commit deletions: tombstone --------------------------------------
         if d_src.size:
-            for pos in kill_base:
-                self.base_alive[pos] = False
-                self._dead_base += 1
+            kb = np.asarray(kill_base, dtype=np.int64)
+            self.base_alive[kb] = False
+            self._dead_base += kb.shape[0]
             # staged extra index == buffer index (pending inserts were staged
             # at [ne, ne+k) and committed to the same slots)
-            for pos in kill_extra:
-                self._ex_alive[pos] = False
-                self._dead_extra += 1
+            ke = np.asarray(kill_extra, dtype=np.int64)
+            self._ex_alive[ke] = False
+            self._dead_extra += ke.shape[0]
             np.add.at(self.out_deg, d_src, -1)
             np.add.at(self.in_deg, d_dst, -1)
             self.deleted_since_compact += d_src.shape[0]

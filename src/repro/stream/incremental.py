@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .delta import ApplyResult, DeltaGraph
+from .delta import ApplyResult, DeltaGraph, occurrence_rank
 
 __all__ = [
     "StreamArrays",
@@ -390,16 +390,9 @@ class IncrementalPageRank:
 # Incremental SSSP
 # ---------------------------------------------------------------------------
 
-def _occurrence_rank(inv: np.ndarray) -> np.ndarray:
-    """Rank of each element within its key group (0 for a key's first
-    occurrence in array order, 1 for its second, ...)."""
-    order = np.argsort(inv, kind="stable")
-    sorted_inv = inv[order]
-    starts = np.flatnonzero(np.r_[True, np.diff(sorted_inv) != 0])
-    counts = np.diff(np.r_[starts, inv.size])
-    ranks = np.empty(inv.size, dtype=np.int64)
-    ranks[order] = np.arange(inv.size) - np.repeat(starts, counts)
-    return ranks
+# the per-key occurrence-claim primitive now lives in ``delta`` (it is shared
+# with the vectorized deletion staging of ``DeltaGraph.apply``)
+_occurrence_rank = occurrence_rank
 
 
 @partial(jax.jit, static_argnames=("max_iters",))

@@ -27,29 +27,81 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from ..cachesim import (DEFAULT_TRACE_LEN, mpka, property_trace,
-                        scaled_hierarchy, stack_distances, to_blocks)
+from ..cachesim import (DEFAULT_TRACE_LEN, flat_structure,
+                        interleave_structure, mpka, mpka_pinned,
+                        property_trace, scaled_hierarchy, stack_distances,
+                        to_blocks)
 from ..graph import csr
+from ..pack.layout import PackedAdjacency, PackedGraph, pack_graph
 from .delta import ApplyResult, DeltaGraph
 from .incremental import IncrementalPageRank, IncrementalSSSP
 from .regroup import IncrementalDBG, RemapDelta
 
-__all__ = ["StreamConfig", "StreamService", "IngestStats", "layout_mpka"]
+__all__ = ["StreamConfig", "StreamService", "IngestStats", "layout_mpka",
+           "packed_mpka"]
 
 
 def layout_mpka(g: csr.Graph, mapping: Optional[np.ndarray] = None,
                 levels=None, mode: str = "pull",
-                max_len: int = DEFAULT_TRACE_LEN) -> Dict[str, float]:
+                max_len: int = DEFAULT_TRACE_LEN,
+                include_structure: bool = False) -> Dict[str, float]:
     """MPKA of ``g`` under ``mapping`` (None = original ids).
 
     The single trace-to-MPKA recipe (relabel → property trace → blocks →
     stack distances → MPKA) shared by ``StreamService.locality`` and the
     churn benchmark, so the trace cap and pipeline can't desynchronize.
+
+    ``include_structure=True`` switches to the storage-format-aware trace
+    (per-row indptr reads + per-edge index reads interleaved with the
+    property stream) — the flat-CSR side of the ``repro.pack`` comparison.
     """
     g2 = g if mapping is None else csr.relabel(g, mapping)
     if levels is None:
         levels = scaled_hierarchy(g.num_vertices)
-    tr = to_blocks(property_trace(g2, mode, max_len=max_len))
+    if include_structure:
+        counts, meta, edge = flat_structure(g2, mode)
+        tr = interleave_structure(property_trace(g2, mode), counts, meta,
+                                  edge, max_len=max_len)
+    else:
+        tr = to_blocks(property_trace(g2, mode, max_len=max_len))
+    return mpka(stack_distances(tr), levels)
+
+
+def packed_mpka(packed, levels=None, mode: str = "pull",
+                max_len: int = DEFAULT_TRACE_LEN,
+                pin_hot: bool = False,
+                bytes_per_vertex: int = 8,
+                block_bytes: int = 64) -> Dict[str, float]:
+    """MPKA of a traversal over the PACKED storage format.
+
+    Same access model as ``layout_mpka(..., include_structure=True)`` — one
+    metadata read per row, one index read per edge, one property read per
+    edge — but with structure addresses drawn from the packed layout (hot
+    slot tables + cold varint bytes + degree-implied metadata) and rows
+    visited in packed traversal order (hot groups first, then the cold
+    tail).  Comparing the two at equal ``CacheLevels`` quantifies what the
+    compression buys in cache capacity.
+
+    ``pin_hot=True`` additionally evaluates the GRASP-lite policy
+    (``cachesim.mpka_pinned``): the hot segment's property blocks bypass
+    LLC demotion; the result then carries ``l3_pinned_mpka`` next to the
+    plain-LRU numbers.
+    """
+    adj: PackedAdjacency = (packed.in_adj if mode == "pull"
+                            else packed.out_adj) \
+        if isinstance(packed, PackedGraph) else packed
+    if levels is None:
+        levels = scaled_hierarchy(adj.num_vertices)
+    counts, meta, edge = adj.structure_addresses()
+    _, prop_ids, _ = adj.decode_edges()
+    tr = interleave_structure(prop_ids, counts, meta, edge,
+                              bytes_per_vertex=bytes_per_vertex,
+                              block_bytes=block_bytes, max_len=max_len)
+    if pin_hot:
+        vpb = max(1, block_bytes // bytes_per_vertex)
+        hot_ids = (np.concatenate([h.rows for h in adj.hot])
+                   if adj.hot else np.zeros(0, np.int64))
+        return mpka_pinned(tr, np.unique(hot_ids // vpb), levels)
     return mpka(stack_distances(tr), levels)
 
 
@@ -62,6 +114,11 @@ class StreamConfig:
     # its next query, so unbounded roots would leak memory and ingest time
     # in a long-lived service.  Evicted roots just re-solve on next query.
     max_sssp_roots: int = 8
+    # keep a PackedGraph view of the base CSR: rebuilt via
+    # ``PackedGraph.from_delta`` after every compaction (the pack subsystem's
+    # stream hook), so layout-sensitive consumers always see a packed layout
+    # of the CURRENT base rather than a stale snapshot
+    repack_on_compact: bool = False
     hysteresis: float = 0.25
     spec_drift_tol: float = 0.2
     damping: float = 0.85
@@ -95,6 +152,9 @@ class StreamService:
                            spec_drift_tol=self.config.spec_drift_tol)
             if self.config.regroup_every else None)
         self._sssp: Dict[int, IncrementalSSSP] = {}
+        # at construction the DeltaGraph base IS ``g`` — pack it directly
+        self.packed: Optional[PackedGraph] = (
+            pack_graph(g) if self.config.repack_on_compact else None)
         self.batches_applied = 0
         self.compactions = 0
         self.history: List[IngestStats] = []
@@ -131,10 +191,14 @@ class StreamService:
 
         compacted = False
         if self.dg.should_compact(self.config.compact_threshold):
-            self.dg.compact()
+            fresh = self.dg.compact()
             self.pr.resync()
             self.compactions += 1
             compacted = True
+            if self.config.repack_on_compact:
+                # compact() just materialized the fresh base CSR — pack it
+                # directly instead of snapshotting a second time
+                self.packed = pack_graph(fresh)
 
         stats = IngestStats(
             batch_index=self.batches_applied,

@@ -1,0 +1,314 @@
+"""repro.pack: codec round-trips, layout inverses, engine bit-identity,
+kernel-vs-oracle, and the cachesim storage-trace integration."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import bc, pagerank, sssp, to_arrays
+from repro.cachesim import (CacheLevels, interleave_structure, mpka,
+                            mpka_pinned, scaled_hierarchy, stack_distances)
+from repro.core import reorder
+from repro.graph import csr as csr_mod
+from repro.graph import datasets, generators
+from repro.kernels.csr_spmv.ref import csr_spmv_ref
+from repro.kernels.pack_spmv.ops import pack_spmv
+from repro.kernels.pack_spmv.pack_spmv import hot_spmv_pallas
+from repro.kernels.pack_spmv.ref import hot_spmv_ref
+from repro.pack import codec, engine, layout
+from repro.stream.delta import DeltaGraph
+from repro.stream.service import layout_mpka, packed_mpka
+
+
+# ------------------------------------------------------------------- codec
+# dtype-edge boundary values of the byte-aligned varint: 1/2/3/4-byte
+# transitions plus the extreme vertex ids an int32/uint32 graph can hold
+BOUNDARY_VALUES = [0, 1, 127, 128, 255, 256, 2 ** 14, 2 ** 16 - 1, 2 ** 16,
+                   2 ** 24 - 1, 2 ** 24, 2 ** 31 - 1, 2 ** 32 - 1]
+
+
+def test_varint_boundary_values_roundtrip():
+    vals = np.array(BOUNDARY_VALUES, np.int64)
+    counts = np.array([1, 2, 0, 4, 6], np.int64)
+    gvl = codec.encode_values(vals, counts, rows_per_block=2)
+    np.testing.assert_array_equal(codec.decode_all(gvl), vals)
+
+
+def test_varint_blocks_decode_independently():
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 9, 40).astype(np.int64)
+    vals = rng.integers(0, 2 ** 31, int(counts.sum())).astype(np.int64)
+    gvl = codec.encode_values(vals, counts, rows_per_block=4)
+    parts = [codec.decode_block(gvl, b)[0] for b in range(gvl.num_blocks)]
+    np.testing.assert_array_equal(np.concatenate(parts), vals)
+    assert codec.decode_block(gvl, 1)[1] == 4  # first row of block 1
+
+
+def test_varint_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        codec.encode_values(np.array([2 ** 32]), np.array([1]))
+    with pytest.raises(ValueError):
+        codec.encode_values(np.array([-1]), np.array([1]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 32 - 1), min_size=0, max_size=60),
+       st.integers(1, 7))
+def test_varint_roundtrip_property(vals_list, rpb):
+    vals = np.array(vals_list, np.int64)
+    # random row split
+    rng = np.random.default_rng(len(vals_list))
+    counts = []
+    left = vals.shape[0]
+    while left > 0:
+        c = int(rng.integers(0, left + 1))
+        counts.append(c)
+        left -= c
+    counts.append(0)
+    gvl = codec.encode_values(vals, np.array(counts, np.int64),
+                              rows_per_block=rpb)
+    np.testing.assert_array_equal(codec.decode_all(gvl), vals)
+
+
+def test_delta_rows_roundtrip():
+    rng = np.random.default_rng(1)
+    counts = rng.integers(0, 12, 30).astype(np.int64)
+    nb = np.concatenate([np.sort(rng.integers(0, 5000, c))
+                         for c in counts]) if counts.sum() else np.zeros(0)
+    vals = codec.delta_encode_rows(nb, counts)
+    np.testing.assert_array_equal(codec.delta_decode_values(vals, counts), nb)
+
+
+# ------------------------------------------------------------------ layout
+def _canon_edges(g):
+    s, d, w = csr_mod.to_edges(g)
+    order = (np.lexsort((w, d, s)) if w is not None
+             else np.lexsort((d, s)))
+    return (s[order], d[order]) + ((w[order],) if w is not None else ())
+
+
+@pytest.mark.parametrize("key", ["kr", "lj", "road", "uni"])
+@pytest.mark.parametrize("technique", ["original", "dbg", "sort"])
+def test_pack_unpack_is_exact_inverse(key, technique):
+    g, _ = reorder.reorder_graph(datasets.load(key, "test"), technique)
+    pg = layout.pack_graph(g)
+    gu = pg.unpack()
+    for a, b in zip(_canon_edges(g), _canon_edges(gu)):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(pg.in_adj.degrees(), g.in_degrees())
+    np.testing.assert_array_equal(pg.out_adj.degrees(), g.out_degrees())
+
+
+def test_pack_unpack_weighted_keeps_weight_multisets():
+    g = datasets.load_weighted("kr", "test")
+    pg = layout.pack_graph(g)
+    for a, b in zip(_canon_edges(g), _canon_edges(pg.unpack())):
+        np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 30 * 30 - 1), min_size=2, max_size=300),
+       st.integers(0, 2))
+def test_pack_roundtrip_property(flat_edges, hot_groups_extra):
+    """Neighbor multisets survive packing for arbitrary edge lists (incl.
+    parallel edges and isolated vertices) under any hot/cold split."""
+    n = 30
+    e = np.array(flat_edges, np.int64)
+    src, dst = e // n, e % n
+    g = csr_mod.from_edges(src, dst, n)
+    pg = layout.pack_graph(g, hot_groups=1 + hot_groups_extra,
+                           rows_per_block=5, slot_align=4)
+    for a, b in zip(_canon_edges(g), _canon_edges(pg.unpack())):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_packing_factor_bounded_by_geometric_groups():
+    g, _ = reorder.reorder_graph(datasets.load("kr", "test"), "dbg")
+    pg = layout.pack_graph(g)
+    # geometric degree ranges bound hot padding: utilization > 1/2 up to
+    # alignment slack of one line per row
+    assert pg.in_adj.packing_factor > 0.35
+    assert pg.in_adj.hot_edges + pg.in_adj.cold.num_edges == g.num_edges
+
+
+def test_dbg_ordering_compresses_no_worse_than_shuffled_original():
+    """The ordering↔compressibility coupling on a skew/unstructured graph
+    (ISSUE 3 acceptance: DBG <= original bytes/edge)."""
+    g = datasets.load("kr", "test")
+    b_orig = layout.pack_graph(g).bytes_per_edge()
+    g2, _ = reorder.reorder_graph(g, "dbg")
+    b_dbg = layout.pack_graph(g2).bytes_per_edge()
+    assert b_dbg <= b_orig
+    # and both beat the flat CSR baseline on a skewed graph
+    assert b_dbg < layout.flat_csr_nbytes(g) / (2 * g.num_edges)
+
+
+# ------------------------------------------------------------------ engine
+def test_packed_edge_maps_match_flat_engine():
+    from repro.apps.engine import edge_map_pull, edge_map_push
+    g, _ = reorder.reorder_graph(datasets.load("wl", "test"), "dbg")
+    pg = layout.pack_graph(g)
+    gu = pg.unpack()
+    ga = to_arrays(gu)
+    pa = engine.packed_arrays(pg)
+    rng = np.random.default_rng(0)
+    prop = jnp.asarray(rng.random(g.num_vertices).astype(np.float32))
+    frontier = jnp.asarray(rng.random(g.num_vertices) < 0.4)
+    np.testing.assert_array_equal(
+        np.asarray(edge_map_pull(ga, prop, reduce="sum")),
+        np.asarray(engine.edge_map_pull_packed(pa, prop, reduce="sum")))
+    np.testing.assert_array_equal(
+        np.asarray(edge_map_pull(ga, prop, reduce="min",
+                                 src_frontier=frontier, neutral=jnp.inf)),
+        np.asarray(engine.edge_map_pull_packed(
+            pa, prop, reduce="min", src_frontier=frontier,
+            neutral=jnp.inf)))
+    np.testing.assert_array_equal(
+        np.asarray(edge_map_push(ga, prop, reduce="min",
+                                 src_frontier=frontier, neutral=jnp.inf,
+                                 init=prop)),
+        np.asarray(engine.edge_map_push_packed(
+            pa, prop, reduce="min", src_frontier=frontier,
+            neutral=jnp.inf, init=prop)))
+
+
+def test_packed_pagerank_bit_identical_to_flat():
+    g, _ = reorder.reorder_graph(datasets.load("kr", "test"), "dbg")
+    pg = layout.pack_graph(g)
+    pa = engine.packed_arrays(pg)
+    r_flat, it_flat = pagerank(to_arrays(pg.unpack()))
+    r_pack, it_pack = engine.pagerank_packed(pa)
+    assert int(it_flat) == int(it_pack)
+    np.testing.assert_array_equal(np.asarray(r_flat), np.asarray(r_pack))
+
+
+def test_packed_sssp_bit_identical_to_flat():
+    g = datasets.load_weighted("kr", "test")
+    g2, _ = reorder.reorder_graph(g, "dbg", degree_source="in")
+    pg = layout.pack_graph(g2)
+    pa = engine.packed_arrays(pg)
+    d_flat, it_flat = sssp(to_arrays(pg.unpack()), jnp.int32(0))
+    d_pack, it_pack = engine.sssp_packed(pa, jnp.int32(0))
+    assert int(it_flat) == int(it_pack)
+    np.testing.assert_array_equal(np.asarray(d_flat), np.asarray(d_pack))
+
+
+def test_packed_bc_bit_identical_to_flat():
+    g, _ = reorder.reorder_graph(datasets.load("lj", "test"), "dbg")
+    pg = layout.pack_graph(g)
+    pa = engine.packed_arrays(pg)
+    c_flat, d_flat, l_flat = bc(to_arrays(pg.unpack()), jnp.int32(3))
+    c_pack, d_pack, l_pack = engine.bc_packed(pa, jnp.int32(3))
+    assert int(l_flat) == int(l_pack)
+    np.testing.assert_array_equal(np.asarray(d_flat), np.asarray(d_pack))
+    np.testing.assert_array_equal(np.asarray(c_flat), np.asarray(c_pack))
+
+
+# ------------------------------------------------------------------ kernel
+@pytest.mark.parametrize("r,w,rt,wt", [(128, 128, 64, 128), (64, 256, 64, 128)])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_hot_spmv_pallas_matches_ref(r, w, rt, wt, weighted):
+    rng = np.random.default_rng(r + w + weighted)
+    x = jnp.asarray(rng.normal(size=777).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 777, (r, w)).astype(np.uint16))
+    deg = jnp.asarray(rng.integers(0, w + 1, r).astype(np.int32))
+    wgt = (jnp.asarray(rng.random((r, w)).astype(np.float32))
+           if weighted else None)
+    y = hot_spmv_pallas(x, idx, deg, wgt, row_tile=rt, width_tile=wt)
+    np.testing.assert_allclose(y, hot_spmv_ref(x, idx, deg, wgt),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("key", ["wl", "kr"])
+def test_pack_spmv_end_to_end_matches_csr_oracle(key):
+    g, _ = reorder.reorder_graph(datasets.load(key, "test"), "dbg",
+                                 degree_source="in")
+    pg = layout.pack_graph(g)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=g.num_vertices).astype(np.float32))
+    y = pack_spmv(x, pg.in_adj)
+    ga = to_arrays(g)
+    y_ref = csr_spmv_ref(x, ga.in_src, ga.in_dst, ga.in_w, g.num_vertices)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- cachesim
+def test_interleave_structure_layout():
+    # 2 rows, degrees (2, 1): [meta0, s0, p0, s1, p1, meta1, s2, p2]
+    tr = interleave_structure(
+        prop_ids=np.array([8, 16, 24]),
+        row_counts=np.array([2, 1]),
+        meta_addr=np.array([0, 8]),
+        edge_addr=np.array([64, 128, 192]),
+        bytes_per_vertex=8, block_bytes=64)
+    from repro.cachesim import STRUCT_REGION as S
+    np.testing.assert_array_equal(
+        tr, [S + 0, S + 1, 1, S + 2, 2, S + 0, S + 3, 3])
+
+
+def test_packed_trace_beats_flat_dbg_at_equal_cache_size():
+    """ISSUE 3 acceptance: MPKA(DBG+pack) <= MPKA(DBG) at equal capacity."""
+    g = datasets.load("kr", "test")
+    levels = scaled_hierarchy(g.num_vertices)
+    g2, _ = reorder.reorder_graph(g, "dbg")
+    flat = layout_mpka(g2, None, levels, include_structure=True)
+    packed = packed_mpka(layout.pack_graph(g2), levels)
+    assert packed["l3_mpka"] <= flat["l3_mpka"]
+    assert packed["l2_mpka"] <= flat["l2_mpka"]
+
+
+def test_mpka_pinned_protects_thrashed_hot_blocks():
+    # 4 hot blocks revisited between streams of 8 fresh blocks: plain LRU
+    # (capacity 8) evicts them every round; pinning keeps them resident.
+    rounds = []
+    for i in range(50):
+        rounds.append([0, 1, 2, 3] + list(range(100 + 8 * i, 108 + 8 * i)))
+    trace = np.array(rounds).ravel()
+    levels = CacheLevels(l1_blocks=2, l2_blocks=4, l3_blocks=8)
+    out = mpka_pinned(trace, np.arange(4), levels)
+    assert out["pinned_blocks"] == 4
+    assert out["l3_pinned_mpka"] < out["l3_mpka"]
+    # exact: pinned misses = 4 cold + 400 stream; plain misses everything
+    assert out["l3_mpka"] == pytest.approx(1000.0)
+    assert out["l3_pinned_mpka"] == pytest.approx(
+        1000.0 * (4 + 400) / trace.shape[0])
+
+
+def test_mpka_pinned_refuses_oversized_region():
+    trace = np.arange(100) % 20
+    levels = CacheLevels(l1_blocks=2, l2_blocks=4, l3_blocks=8)
+    out = mpka_pinned(trace, np.arange(10), levels)  # 10 > 8 // 2
+    assert out["pinned_blocks"] == 0
+    assert out["l3_pinned_mpka"] == out["l3_mpka"]
+
+
+# ------------------------------------------------------------------ stream
+def test_from_delta_rebuilds_packed_view_after_churn():
+    rng = np.random.default_rng(9)
+    g = generators.rmat(512, 4096, seed=2)
+    dg = DeltaGraph(g)
+    for _ in range(4):
+        es, ed, _ = dg.alive_edges()
+        drop = rng.choice(es.shape[0], size=64, replace=False)
+        dg.apply(add_src=rng.integers(0, 512, 128),
+                 add_dst=rng.integers(0, 512, 128),
+                 del_src=es[drop], del_dst=ed[drop])
+    dg.compact()
+    pg = layout.PackedGraph.from_delta(dg)
+    for a, b in zip(_canon_edges(dg.base), _canon_edges(pg.unpack())):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_service_repack_on_compact_hook():
+    from repro.stream import StreamConfig, StreamService
+    rng = np.random.default_rng(3)
+    g = generators.rmat(256, 1024, seed=1)
+    svc = StreamService(g, StreamConfig(repack_on_compact=True,
+                                        compact_threshold=0.05))
+    assert svc.packed is not None
+    first = svc.packed
+    while svc.compactions == 0:
+        svc.ingest(add_src=rng.integers(0, 256, 128),
+                   add_dst=rng.integers(0, 256, 128))
+    assert svc.packed is not first
+    assert svc.packed.num_edges == svc.dg.base.num_edges

@@ -105,6 +105,55 @@ def test_delta_graph_weighted_deletion_removes_matching_weight(weighted_base):
     assert 7.5 in w2 and 2.25 in w2
 
 
+def test_delta_graph_vectorized_deletion_staging_matches_oracle():
+    """The vectorized per-key claim (incl. duplicate deletion requests of
+    one key, weighted parallel edges, and same-batch insert+delete) keeps
+    exact edge-multiset semantics and stays atomic on failure."""
+    from collections import Counter
+
+    rng = np.random.default_rng(11)
+    g = datasets.load_weighted("kr", "test", seed=4)
+    dg = DeltaGraph(g)
+    s, d, w = csr.to_edges(g)
+    oracle = Counter(zip(s.tolist(), d.tolist()))
+    for _ in range(12):
+        es, ed, _ = dg.alive_edges()
+        # duplicates on purpose: multi-occurrence keys take the loop path
+        idx = rng.choice(es.shape[0], size=40, replace=True)
+        req = Counter(zip(es[idx].tolist(), ed[idx].tolist()))
+        ds, dd = [], []
+        for key, c in req.items():
+            take = min(c, oracle[key])
+            ds += [key[0]] * take
+            dd += [key[1]] * take
+            oracle[key] -= take
+            if not oracle[key]:
+                del oracle[key]
+        n_add = int(rng.integers(1, 60))
+        a_s = rng.integers(0, dg.num_vertices, n_add)
+        a_d = rng.integers(0, dg.num_vertices, n_add)
+        for pair in zip(a_s.tolist(), a_d.tolist()):
+            oracle[pair] += 1
+        res = dg.apply(add_src=a_s, add_dst=a_d, add_w=rng.random(n_add),
+                       del_src=np.array(ds), del_dst=np.array(dd))
+        assert res.num_deleted == len(ds)
+    es, ed, _ = dg.alive_edges()
+    assert Counter(zip(es.tolist(), ed.tolist())) == oracle
+    dg.compact()  # degree bookkeeping must have stayed consistent
+    # atomicity: a batch whose SECOND request of a key exceeds availability
+    # must stage-fail without mutating anything
+    es, ed, _ = dg.alive_edges()
+    before = dg.num_edges
+    lone = next(p for p, c in Counter(zip(es.tolist(), ed.tolist())).items()
+                if c == 1)
+    with pytest.raises(KeyError):
+        dg.apply(del_src=[lone[0], lone[0]], del_dst=[lone[1], lone[1]])
+    assert dg.num_edges == before
+    es2, ed2, _ = dg.alive_edges()
+    assert Counter(zip(es2.tolist(), ed2.tolist())) == Counter(
+        zip(es.tolist(), ed.tolist()))
+
+
 def test_delta_graph_out_edges_of_matches_snapshot(base_graph):
     dg = DeltaGraph(base_graph)
     rng = np.random.default_rng(2)
