@@ -90,6 +90,24 @@ APPS = [
 ]
 
 
+def time_jitted(fn, *args, reps: int = 3, warmup: bool = True) -> float:
+    """Seconds per call of a jax callable (optional warmup/compile call, then
+    the mean of ``reps`` timed calls, block_until_ready).  The per-iteration
+    timing primitive shared by the perf harnesses (edge_map_perf et al).
+    Pass ``warmup=False`` when the caller already executed the compiled fn
+    (e.g. to read its result) — full app runs are too expensive to repeat."""
+    import jax
+
+    if warmup:
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / max(1, reps)
+
+
 def save_json(name: str, obj) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, name), "w") as f:

@@ -1,9 +1,10 @@
 """Full graph-analytics run: all five Ligra apps on a reordered dataset,
 including the Pallas degree-binned SpMV (kernel K1) as the PageRank edge-map,
-a packed-storage section (repro.pack: hot/cold segmented compressed CSR with
-analytics running directly over it), plus a streaming section: DeltaGraph
-ingest with incremental PageRank refresh and online DBG maintenance
-(repro.stream).
+a backend-selection section (FlatBackend vs the fused-Pallas EllBackend from
+kernels.edge_map), a packed-storage section (repro.pack: hot/cold segmented
+compressed CSR with analytics running directly over it), plus a streaming
+section: DeltaGraph ingest with incremental PageRank refresh and online DBG
+maintenance (repro.stream).
 
   PYTHONPATH=src python examples/graph_analytics.py [dataset]
 """
@@ -36,7 +37,8 @@ def main():
     g2, res = reorder_graph(g, "dbg", degree_source="out")
     print(f"DBG reordering: {res.seconds:.3f}s, {res.num_groups} groups")
     ga = to_arrays(g2)
-    gaw = to_arrays(reorder_graph(gw, "dbg", degree_source="in")[0])
+    gw2 = reorder_graph(gw, "dbg", degree_source="in")[0]
+    gaw = to_arrays(gw2)
 
     for label, fn, args in [
         ("PR", pagerank, (ga,)),
@@ -51,6 +53,29 @@ def main():
         iters = int(out[-1])  # PR/PRD/SSSP/Radii: iterations; BC: BFS levels
         print(f"  {label:6s} iters={iters}  {time.time()-t0:.2f}s  "
               f"finite={bool(jnp.isfinite(jnp.asarray(first, jnp.float32)).all())}")
+
+    # ----- backend selection: the same apps over the fused edge-map backend --
+    # to_arrays(g) is the flat oracle; to_arrays(g, backend="ell") routes every
+    # edge_map_pull/push through the fused Pallas kernels (kernels.edge_map):
+    # gather + weight-add + frontier-mask + reduce in ONE pass over DBG-ELL
+    # tiles, push included (a push with a reduction is the transposed pull).
+    print("\nedge-map backends (repro.apps.engine):")
+    ga_ell = to_arrays(g2, backend="ell")
+    gaw_ell = to_arrays(gw2, backend="ell")
+    from repro.kernels.edge_map.ops import fused_edge_map_bytes
+    slots = sum(int(np.prod(t.idx.shape)) for t in ga_ell.in_tiles)
+    print(f"  EllBackend: {len(ga_ell.in_tiles)} DBG-ELL groups, "
+          f"{slots/g2.num_edges:.2f} slots/edge, fused pull "
+          f"{fused_edge_map_bytes(ga_ell.in_tiles, g2.num_vertices)/1e6:.1f} "
+          f"MB/iter (single pass)")
+    r_flat2, _ = pagerank(ga)
+    r_ell, _ = pagerank(ga_ell)
+    d_flat2, _ = sssp(gaw, jnp.int32(0))
+    d_ell, _ = sssp(gaw_ell, jnp.int32(0))
+    print(f"  PageRank flat vs fused: max err "
+          f"{float(jnp.abs(r_flat2 - r_ell).max()):.1e}; SSSP bit-identical: "
+          f"{bool(np.array_equal(np.asarray(d_flat2), np.asarray(d_ell)))} "
+          f"(direction-optimizing pull/push switch on frontier density)")
 
     # Pallas kernel as the PageRank edge map (pull-mode SpMV over DBG groups)
     spec = dbg_spec(max(1.0, g2.in_degrees().mean()))

@@ -1,4 +1,4 @@
-"""Ligra-style vertex-centric engine in pure JAX (paper §II-B, §V-A).
+"""Ligra-style vertex-centric engine with pluggable edge-map backends.
 
 The engine mirrors Ligra's two primitives:
 
@@ -9,16 +9,29 @@ The engine mirrors Ligra's two primitives:
     mode of §VI-C).
 
 Frontiers are dense boolean masks — static shapes keep everything jit-able;
-``direction_optimizing`` mirrors Ligra's pull/push switch on frontier density.
+``frontier_density`` is Ligra's pull/push switch statistic and now drives the
+direction-optimizing SSSP/BC loops.
 
-Data layout: ``GraphArrays`` flattens both CSR directions into edge-parallel
-form.  For the in-direction, edge e has source ``in_src[e]`` and destination
-``in_dst[e]`` with edges grouped (sorted) by destination — so pull reductions
-are ``segment_sum(..., indices_are_sorted=True)``; symmetrically for out.
+Two backends implement the primitives behind one protocol:
+
+  * ``FlatBackend`` — the original edge-parallel path (gather ``prop[src]`` →
+    weight add → frontier mask → segment reduce / scatter), 3-4 separate O(E)
+    HBM passes.  Kept as the oracle: every app must agree with it.
+  * ``EllBackend`` — the ``kernels.edge_map`` Pallas family: the whole edge
+    map fused into one pass over per-DBG-group ELL tiles (the layouts the
+    paper's grouping argues for).  Push needs no scatter at all — a push with
+    a reduction into destinations is the pull of the transposed direction, so
+    the same in-direction tiles serve both primitives.  min/max reductions
+    are bit-identical to flat; sum differs only in fp association (~1e-6).
+
+Apps are written against the dispatching ``edge_map_pull``/``edge_map_push``
+functions and run unchanged on either backend; raw ``GraphArrays`` (the
+``repro.dist`` / ``repro.stream`` substrate) keep the flat path.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import dataclasses
+from typing import NamedTuple, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -26,14 +39,26 @@ import numpy as np
 
 from ..graph import csr
 
-__all__ = ["GraphArrays", "to_arrays", "edge_map_pull", "edge_map_push", "vertex_map"]
+__all__ = [
+    "GraphArrays",
+    "EdgeMapBackend",
+    "FlatBackend",
+    "EllBackend",
+    "to_arrays",
+    "edge_map_pull",
+    "edge_map_push",
+    "vertex_map",
+    "frontier_density",
+    "switch_by_density",
+    "DENSITY_THRESHOLD",
+]
 
 
 class GraphArrays(NamedTuple):
     # pull direction (in-edges, grouped by destination)
     in_src: jnp.ndarray  # (E,) int32 — source of each in-edge
     in_dst: jnp.ndarray  # (E,) int32 — owning destination (sorted ascending)
-    in_w: jnp.ndarray    # (E,) float32 — weights (ones if unweighted)
+    in_w: jnp.ndarray    # (E,) float32 — weights (shared ones plane if unweighted)
     # push direction (out-edges, grouped by source)
     out_dst: jnp.ndarray  # (E,) int32 — destination of each out-edge
     out_src: jnp.ndarray  # (E,) int32 — owning source (sorted ascending)
@@ -50,31 +75,46 @@ class GraphArrays(NamedTuple):
         return int(self.in_src.shape[0])
 
 
-def to_arrays(g: csr.Graph) -> GraphArrays:
-    """Host-side flattening of both CSR directions into GraphArrays."""
+def _graph_arrays(g: csr.Graph) -> GraphArrays:
+    """Host-side flattening of both CSR directions into GraphArrays.
+
+    Unweighted graphs share ONE device plane of ones between ``in_w`` and
+    ``out_w`` (they were two identical O(E) allocations; the flat edge maps
+    only read the plane when ``use_weights`` anyway, and the fused backend
+    drops it entirely)."""
     v = g.num_vertices
     in_csr, out_csr = g.in_csr, g.out_csr
     in_deg = in_csr.degrees().astype(np.int32)
     out_deg = out_csr.degrees().astype(np.int32)
     in_dst = np.repeat(np.arange(v, dtype=np.int32), in_deg)
     out_src = np.repeat(np.arange(v, dtype=np.int32), out_deg)
-    in_w = in_csr.weights if in_csr.weights is not None else np.ones(
-        in_csr.num_edges, np.float32)
-    out_w = out_csr.weights if out_csr.weights is not None else np.ones(
-        out_csr.num_edges, np.float32)
+    if in_csr.weights is None and out_csr.weights is None:
+        ones = jnp.ones(in_csr.num_edges, jnp.float32)
+        in_w = out_w = ones  # one buffer, both fields
+    else:
+        in_w = jnp.asarray(
+            in_csr.weights if in_csr.weights is not None
+            else np.ones(in_csr.num_edges, np.float32), jnp.float32)
+        out_w = jnp.asarray(
+            out_csr.weights if out_csr.weights is not None
+            else np.ones(out_csr.num_edges, np.float32), jnp.float32)
     return GraphArrays(
         in_src=jnp.asarray(in_csr.indices, jnp.int32),
         in_dst=jnp.asarray(in_dst),
-        in_w=jnp.asarray(in_w, jnp.float32),
+        in_w=in_w,
         out_dst=jnp.asarray(out_csr.indices, jnp.int32),
         out_src=jnp.asarray(out_src),
-        out_w=jnp.asarray(out_w, jnp.float32),
+        out_w=out_w,
         in_deg=jnp.asarray(in_deg),
         out_deg=jnp.asarray(out_deg),
     )
 
 
-def edge_map_pull(
+# ---------------------------------------------------------------------------
+# Flat (edge-parallel) implementations — the oracle path
+# ---------------------------------------------------------------------------
+
+def _pull_flat(
     ga: GraphArrays,
     prop: jnp.ndarray,
     *,
@@ -83,12 +123,6 @@ def edge_map_pull(
     use_weights: bool = False,
     neutral: float = 0.0,
 ):
-    """dst <- REDUCE over in-edges of f(prop[src]).
-
-    ``prop`` may be (V,) or (V, S) (multi-source apps like Radii/BC batches).
-    ``reduce`` in {sum, min, max, or}.  ``src_frontier`` masks contributing
-    sources (inactive sources contribute ``neutral``).
-    """
     vals = prop[ga.in_src]  # irregular gather — THE hot access of the paper
     if use_weights:
         w = ga.in_w if vals.ndim == 1 else ga.in_w[:, None]
@@ -111,7 +145,7 @@ def edge_map_pull(
     raise ValueError(reduce)
 
 
-def edge_map_push(
+def _push_flat(
     ga: GraphArrays,
     prop: jnp.ndarray,
     *,
@@ -121,14 +155,6 @@ def edge_map_push(
     neutral: float = 0.0,
     init: Optional[jnp.ndarray] = None,
 ):
-    """dst <- REDUCE over pushes from active sources (irregular scatter).
-
-    Mirrors Ligra push: iterate out-edges grouped by source, scatter
-    f(prop[src]) into destinations.  Scatter-with-duplicates implemented via
-    ``.at[dst].add/min/max`` — the JAX-native analogue of the paper's
-    read-modify-write traffic (on TPU this lowers to sorted scatters; across
-    devices it becomes the all-to-all the multi-socket analysis maps onto).
-    """
     vals = prop[ga.out_src]
     if use_weights:
         w = ga.out_w if vals.ndim == 1 else ga.out_w[:, None]
@@ -152,13 +178,229 @@ def edge_map_push(
     raise ValueError(reduce)
 
 
+# ---------------------------------------------------------------------------
+# Backend protocol + implementations
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class EdgeMapBackend(Protocol):
+    """What an edge-map backend must provide for the five apps to run."""
+
+    def pull(self, prop, *, reduce="sum", src_frontier=None,
+             use_weights=False, neutral=0.0): ...
+
+    def push(self, prop, *, reduce="sum", src_frontier=None,
+             use_weights=False, neutral=0.0, init=None): ...
+
+
+class _Delegate:
+    """Field passthrough so backends look like GraphArrays to existing code
+    (dist sharding, BC's backward sweep, tests poking at raw arrays)."""
+
+    ga: GraphArrays
+
+    @property
+    def in_src(self): return self.ga.in_src
+    @property
+    def in_dst(self): return self.ga.in_dst
+    @property
+    def in_w(self): return self.ga.in_w
+    @property
+    def out_dst(self): return self.ga.out_dst
+    @property
+    def out_src(self): return self.ga.out_src
+    @property
+    def out_w(self): return self.ga.out_w
+    @property
+    def in_deg(self): return self.ga.in_deg
+    @property
+    def out_deg(self): return self.ga.out_deg
+    @property
+    def num_vertices(self) -> int: return self.ga.num_vertices
+    @property
+    def num_edges(self) -> int: return self.ga.num_edges
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FlatBackend(_Delegate):
+    """Today's gather/segment/scatter path — the correctness oracle."""
+
+    ga: GraphArrays
+
+    def pull(self, prop, **kw):
+        return _pull_flat(self.ga, prop, **kw)
+
+    def push(self, prop, **kw):
+        return _push_flat(self.ga, prop, **kw)
+
+    def tree_flatten(self):
+        return (self.ga,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _int_identity(dtype, reduce: str) -> float:
+    """Finite identity for integer-sourced props (matches the flat engine's
+    empty segments: segment_max over int8 fills with iinfo.min, etc.)."""
+    info = jnp.iinfo(dtype)
+    return {"sum": 0.0, "min": float(info.max), "max": float(info.min),
+            "or": float(info.min)}[reduce]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EllBackend(_Delegate):
+    """Fused Pallas edge maps over per-DBG-group ELL tiles (kernels.edge_map).
+
+    One in-direction tile set serves both primitives: pull reduces a row's
+    lanes directly; push seeds the row accumulator with ``init`` and runs the
+    same kernel (a push-with-reduction IS the transposed pull).  The flat
+    arrays stay on board for the operations outside the fused hot path (BC's
+    backward dependency sweep, ``frontier_density``, dist sharding).
+    """
+
+    ga: GraphArrays
+    in_tiles: Tuple  # Tuple[EllTileGroup, ...]
+    row_tile: int = 64
+    width_tile: int = 128
+    interpret: bool = True
+
+    def _kernel_kw(self):
+        return dict(row_tile=self.row_tile, width_tile=self.width_tile,
+                    interpret=self.interpret)
+
+    def _map1(self, prop, *, reduce, src_frontier, use_weights, neutral, init):
+        from ..kernels.edge_map.ops import fused_edge_map
+
+        red = "max" if reduce == "or" else reduce
+        if red not in ("sum", "min", "max"):
+            raise ValueError(reduce)
+        dtype = prop.dtype
+        identity = None
+        x = prop
+        if not jnp.issubdtype(dtype, jnp.floating):
+            x = prop.astype(jnp.float32)
+            identity = _int_identity(dtype, reduce)
+            if init is not None:
+                init = init.astype(jnp.float32)
+        out = fused_edge_map(
+            self.in_tiles, x, self.ga.num_vertices,
+            reduce=red, src_frontier=src_frontier, use_weights=use_weights,
+            neutral=neutral, init=init, identity=identity,
+            **self._kernel_kw())
+        return out.astype(dtype)
+
+    def pull(self, prop, *, reduce="sum", src_frontier=None,
+             use_weights=False, neutral=0.0):
+        kw = dict(reduce=reduce, src_frontier=src_frontier,
+                  use_weights=use_weights, neutral=neutral, init=None)
+        if prop.ndim == 2:  # multi-source apps (Radii): one lane per column
+            cols = [self._map1(prop[:, s], **kw)
+                    for s in range(prop.shape[1])]
+            return jnp.stack(cols, axis=1)
+        return self._map1(prop, **kw)
+
+    def push(self, prop, *, reduce="sum", src_frontier=None,
+             use_weights=False, neutral=0.0, init=None):
+        if prop.ndim != 1:
+            raise NotImplementedError("fused push is 1-D (no app needs 2-D)")
+        if init is None:
+            fill = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf,
+                    "or": 0}[reduce]
+            init = jnp.full((self.ga.num_vertices,), fill, dtype=prop.dtype)
+        return self._map1(prop, reduce=reduce, src_frontier=src_frontier,
+                          use_weights=use_weights, neutral=neutral, init=init)
+
+    def tree_flatten(self):
+        return ((self.ga, self.in_tiles),
+                (self.row_tile, self.width_tile, self.interpret))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+
+def to_arrays(
+    g: csr.Graph,
+    *,
+    backend: str = "flat",
+    row_tile: int = 64,
+    width_tile: int = 128,
+    interpret: bool = True,
+):
+    """Build an edge-map backend for ``g``.
+
+    ``backend="flat"`` (default) keeps the edge-parallel oracle path;
+    ``"ell"`` packs the in-direction into per-DBG-group ELL tiles and routes
+    every edge map through the fused Pallas kernels; ``"arrays"`` returns the
+    raw ``GraphArrays`` (the dist/stream substrate).
+    """
+    ga = _graph_arrays(g)
+    if backend == "arrays":
+        return ga
+    if backend == "flat":
+        return FlatBackend(ga)
+    if backend == "ell":
+        from ..core.reorder import dbg_spec
+        from ..kernels.edge_map.ops import ell_tiles
+
+        in_deg = g.in_csr.degrees()
+        spec = dbg_spec(max(1.0, float(in_deg.mean()) if in_deg.size else 1.0))
+        tiles = ell_tiles(g.in_csr, spec.boundaries,
+                          row_tile=row_tile, width_tile=width_tile)
+        return EllBackend(ga, tiles, row_tile=row_tile,
+                          width_tile=width_tile, interpret=interpret)
+    raise ValueError(backend)
+
+
+def edge_map_pull(ga, prop, **kw):
+    """dst <- REDUCE over in-edges of f(prop[src]).
+
+    ``prop`` may be (V,) or (V, S) (multi-source apps like Radii/BC batches).
+    ``reduce`` in {sum, min, max, or}.  ``src_frontier`` masks contributing
+    sources (inactive sources contribute ``neutral``).  Dispatches to the
+    backend; raw ``GraphArrays`` take the flat path.
+    """
+    if isinstance(ga, GraphArrays):
+        return _pull_flat(ga, prop, **kw)
+    return ga.pull(prop, **kw)
+
+
+def edge_map_push(ga, prop, **kw):
+    """dst <- REDUCE over pushes from active sources.
+
+    On the flat backend this is the scatter-with-duplicates of the paper's
+    read-modify-write traffic; on the fused backend it is the transposed
+    pull with an ``init``-seeded accumulator — no scatter at all.
+    """
+    if isinstance(ga, GraphArrays):
+        return _push_flat(ga, prop, **kw)
+    return ga.push(prop, **kw)
+
+
 def vertex_map(frontier: jnp.ndarray, fn) -> jnp.ndarray:
     """Apply fn over active vertices (dense mask semantics)."""
     return jnp.where(frontier, fn(), 0)
 
 
-def frontier_density(ga: GraphArrays, frontier: jnp.ndarray) -> jnp.ndarray:
+def frontier_density(ga, frontier: jnp.ndarray) -> jnp.ndarray:
     """Fraction of edges touched by the frontier — Ligra's pull/push switch
     statistic (|out-edges of frontier| / E)."""
     e = jnp.maximum(1, ga.out_deg.sum())
     return jnp.sum(jnp.where(frontier, ga.out_deg, 0)) / e
+
+
+# Ligra's heuristic: go pull once the frontier touches > E/20 edges.  One
+# constant for every direction-optimizing app (SSSP, BC) — the switch is a
+# traffic choice, both directions reduce the identical edge set.
+DENSITY_THRESHOLD = 0.05
+
+
+def switch_by_density(ga, frontier, pull_step, push_step, operand):
+    """``lax.cond`` on :func:`frontier_density`: dense → pull, sparse → push."""
+    return jax.lax.cond(
+        frontier_density(ga, frontier) > DENSITY_THRESHOLD,
+        pull_step, push_step, operand)

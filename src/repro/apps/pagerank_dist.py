@@ -52,7 +52,12 @@ def pagerank_dist(
     :func:`repro.dist.graph.pagerank_sharded` with it directly — the compiled
     executable is cached per (graph, mesh) identity.
     """
-    ga = g if isinstance(g, GraphArrays) else to_arrays(g)
+    if isinstance(g, GraphArrays):
+        ga = g
+    elif hasattr(g, "ga"):  # an engine backend (FlatBackend / EllBackend)
+        ga = g.ga
+    else:
+        ga = to_arrays(g, backend="arrays")
     if mesh is None:
         mesh = make_graph_mesh(n_shards)
     sg = dist_graph.shard_graph(ga, mesh.devices.size, policy=policy)

@@ -1,0 +1,196 @@
+"""Pallas TPU kernel: fused edge map over DBG-ELL tiles — kernel family K5.
+
+Generalizes ``csr_spmv.ell_spmv_pallas`` from sum-only SpMV into the engine's
+full edge-map primitive: one pass over a group's ELL tiles fuses the four
+separate O(E) HBM passes the flat engine lowers to (gather ``prop[src]`` →
+weight add → frontier mask → segment reduce / scatter) into a single kernel:
+
+  * ``reduce`` in {sum, min, max} — min is SSSP's relaxation, max is the
+    Radii/BC reachability OR (over {0,1} lanes);
+  * additive edge weights ride in as an optional (TR, TW) plane, or — when the
+    graph is unweighted — as a constant ``+1`` folded into the kernel with NO
+    plane read at all (half the edge bytes of the weighted path);
+  * the frontier is a (V,) byte vector gathered in-kernel alongside ``x`` —
+    inactive sources contribute the caller's ``neutral``;
+  * padding lanes (ELL slots past the row's true degree) contribute the
+    reduction's exact identity element, so results match the flat engine's
+    segment reductions bit-for-bit for min/max;
+  * ``init_rows`` seeds the accumulator for push-style relaxation
+    (``dst <- min(init[dst], ...)``), fusing the flat path's separate
+    ``init.at[dst].min`` scatter into the same pass;
+  * an optional alive bitplane masks tombstoned edges (the ``repro.stream``
+    base segment) without rebuilding tiles per batch.
+
+Push mode needs no scatter at all: a push with a reduction into destinations
+is the pull of the transposed direction, so the same in-direction tiles serve
+both primitives — the irregular-WRITE mode of the paper's §VI-C becomes a
+regular gather over the very layout DBG builds.
+
+Grid and revisiting structure are inherited from ``ell_spmv_pallas``:
+grid (row_tiles, width_tiles); x / frontier are whole-vector VMEM residents;
+y is revisited across width tiles (index map ignores the width coordinate,
+init on the first width step).  Validated in interpret mode on CPU; the
+attached ``pl.CostEstimate`` records the single-pass HBM byte count that
+``benchmarks/edge_map_perf.py`` compares against the flat engine.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["REDUCE_IDENTITY", "ell_edge_map_pallas"]
+
+REDUCE_IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def _make_kernel(reduce: str, has_w: bool, unit_weights: bool,
+                 has_frontier: bool, has_alive: bool, has_init: bool,
+                 neutral: float, identity: float):
+    """Build the fused kernel for one static configuration of the edge map."""
+
+    def kernel(*refs):
+        x_ref, idx_ref, deg_ref = refs[:3]
+        pos = 3
+        w_ref = fr_ref = al_ref = init_ref = None
+        if has_w:
+            w_ref = refs[pos]
+            pos += 1
+        if has_frontier:
+            fr_ref = refs[pos]
+            pos += 1
+        if has_alive:
+            al_ref = refs[pos]
+            pos += 1
+        if has_init:
+            init_ref = refs[pos]
+            pos += 1
+        y_ref = refs[pos]
+        wi = pl.program_id(1)
+
+        @pl.when(wi == 0)
+        def _init():
+            if has_init:
+                y_ref[...] = init_ref[...]
+            else:
+                y_ref[...] = jnp.full_like(y_ref, identity)
+
+        x = x_ref[...]  # (V,) property vector, VMEM-resident
+        idx = idx_ref[...].astype(jnp.int32)  # storage may be minimal-width
+        tr, tw = idx.shape
+        vals = x[idx]  # THE irregular gather of the paper, now in VMEM
+        if has_w:
+            vals = vals + w_ref[...]  # SSSP-style additive relaxation
+        elif unit_weights:
+            vals = vals + jnp.asarray(1.0, vals.dtype)  # no plane read
+        if has_frontier:
+            active = fr_ref[...][idx] > 0
+            vals = jnp.where(active, vals, neutral)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (tr, tw), 1) + wi * tw
+        valid = cols < deg_ref[...][:, None]  # ELL padding lanes
+        if has_alive:
+            valid = jnp.logical_and(valid, al_ref[...] > 0)
+        vals = jnp.where(valid, vals, identity)
+        if reduce == "sum":
+            y_ref[...] += jnp.sum(vals, axis=1)
+        elif reduce == "min":
+            y_ref[...] = jnp.minimum(y_ref[...], jnp.min(vals, axis=1))
+        else:
+            y_ref[...] = jnp.maximum(y_ref[...], jnp.max(vals, axis=1))
+
+    return kernel
+
+
+def edge_map_tile_bytes(r_pad: int, w_pad: int, num_vertices: int, *,
+                        weighted: bool, frontier: bool, alive: bool,
+                        init: bool, idx_itemsize: int = 4) -> int:
+    """Single-pass HBM bytes of one fused tile call (the CostEstimate)."""
+    b = r_pad * w_pad * idx_itemsize  # idx plane (minimal-width ids)
+    if weighted:
+        b += r_pad * w_pad * 4  # w plane
+    if alive:
+        b += r_pad * w_pad  # int8 alive plane
+    b += r_pad * 4  # deg
+    b += num_vertices * 4  # x (VMEM-resident across steps; counted once)
+    if frontier:
+        b += num_vertices  # int8 frontier vector
+    if init:
+        b += r_pad * 4
+    b += r_pad * 4  # y
+    return b
+
+
+def ell_edge_map_pallas(
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    deg: jnp.ndarray,
+    *,
+    reduce: str = "sum",
+    w: Optional[jnp.ndarray] = None,
+    unit_weights: bool = False,
+    frontier: Optional[jnp.ndarray] = None,
+    alive: Optional[jnp.ndarray] = None,
+    init_rows: Optional[jnp.ndarray] = None,
+    neutral: float = 0.0,
+    identity: Optional[float] = None,
+    row_tile: int = 64,
+    width_tile: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y (R,) = REDUCE over valid lanes of masked(x[idx] (+ w)) [seeded by init].
+
+    ``idx``/``deg`` as in the ELL packers (R % row_tile == 0, W % width_tile
+    == 0; ops.py pads).  ``frontier`` is a (V,) vector (nonzero == active
+    source); ``alive`` an optional (R, W) bitplane.  ``identity`` defaults to
+    the reduction's identity — integer-sourced callers pass a finite one.
+    """
+    if reduce not in REDUCE_IDENTITY:
+        raise ValueError(reduce)
+    r, width = idx.shape
+    assert r % row_tile == 0 and width % width_tile == 0, (
+        idx.shape, row_tile, width_tile)
+    if identity is None:
+        identity = REDUCE_IDENTITY[reduce]
+    grid = (r // row_tile, width // width_tile)
+    x_spec = pl.BlockSpec((x.shape[0],), lambda i, j: (0,))
+    tile_spec = pl.BlockSpec((row_tile, width_tile), lambda i, j: (i, j))
+    row_spec = pl.BlockSpec((row_tile,), lambda i, j: (i,))
+
+    args = [x, idx, deg]
+    in_specs = [x_spec, tile_spec, row_spec]
+    if w is not None:
+        args.append(w)
+        in_specs.append(tile_spec)
+    if frontier is not None:
+        args.append(frontier)
+        in_specs.append(pl.BlockSpec((frontier.shape[0],), lambda i, j: (0,)))
+    if alive is not None:
+        args.append(alive)
+        in_specs.append(tile_spec)
+    if init_rows is not None:
+        args.append(init_rows)
+        in_specs.append(row_spec)
+
+    kernel = _make_kernel(
+        reduce, w is not None, unit_weights and w is None,
+        frontier is not None, alive is not None, init_rows is not None,
+        float(neutral), float(identity))
+    cost = pl.CostEstimate(
+        flops=2 * r * width,
+        bytes_accessed=edge_map_tile_bytes(
+            r, width, x.shape[0], weighted=w is not None,
+            frontier=frontier is not None, alive=alive is not None,
+            init=init_rows is not None,
+            idx_itemsize=idx.dtype.itemsize),
+        transcendentals=0)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((r,), x.dtype),
+        cost_estimate=cost,
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,339 @@
+"""Host-side ELL tile packer + device driver for the fused edge map (K5).
+
+``ell_tiles`` packs ONE adjacency direction into per-DBG-group ELL tiles
+(the paper's Table IV column structure, same geometric-bin padding bound as
+``csr_spmv.ell_pack_groups``) with a per-row true-degree vector instead of a
+stored padding-weight plane, vectorized through ``csr.ragged_offsets``.
+
+``fused_edge_map`` is the device driver: one fused Pallas call per group,
+then an O(V) combine of per-group row results back into vertex space.  Rows
+are grouped by degree, so within the primary tile set every vertex appears in
+exactly one group and the combine is a plain set-scatter; ``extra_tiles``
+(the stream delta segment, whose destinations duplicate base rows) combine
+with the reduction's scatter-op instead.  Nothing here ever materializes an
+O(E) edge-parallel intermediate — that is the whole point.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...graph import csr as csr_mod
+from .edge_map import REDUCE_IDENTITY, edge_map_tile_bytes, ell_edge_map_pallas
+
+__all__ = [
+    "EllTileGroup",
+    "ell_tiles",
+    "coo_tiles",
+    "refresh_alive",
+    "fused_edge_map",
+    "fused_edge_map_bytes",
+]
+
+
+class EllTileGroup(NamedTuple):
+    """Device view of one degree-group's ELL tiles.
+
+    ``rows``  (R,)  int32 owning vertex ids (true, unpadded count)
+    ``idx``   (R_pad, W_pad) int32 neighbor ids (0 in padding lanes)
+    ``deg``   (R_pad,) int32 true degrees (0 for padding rows)
+    ``w``     optional (R_pad, W_pad) f32 additive weights
+    ``alive`` optional (R_pad, W_pad) int8 tombstone mask (stream base)
+    """
+
+    rows: jnp.ndarray
+    idx: jnp.ndarray
+    deg: jnp.ndarray
+    w: Optional[jnp.ndarray] = None
+    alive: Optional[jnp.ndarray] = None
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.rows.shape[0])
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad_dim(n: int, tile: int, fine: int = 8) -> int:
+    """Adaptive padding: groups smaller than one tile pad to the fine (8-lane)
+    granularity and run as a single grid step; larger ones pad to full tiles.
+    Without this, a width-3 cold group would pad 42x to a 128-lane tile —
+    with it, per-group padding stays bounded by the geometric-bin argument."""
+    if n >= tile:
+        return _round_up(n, tile)
+    return _round_up(max(1, n), fine)
+
+
+def _tile_of(pad: int, tile: int) -> int:
+    """Grid tile size for a padded dim (== tile, or the whole dim if small)."""
+    return tile if pad >= tile else pad
+
+
+def _id_dtype(num_vertices: int):
+    """Minimal-width storage for neighbor ids (the pack-subsystem idiom:
+    uint16 slots halve the dominant idx-plane bytes at bench scales)."""
+    return np.uint16 if num_vertices <= np.iinfo(np.uint16).max else np.int32
+
+
+def _slot_coords(degs: np.ndarray):
+    """(row_rep, col): the ELL slot of each edge of a group, in row order."""
+    row_rep = np.repeat(np.arange(degs.shape[0], dtype=np.int64), degs)
+    col = csr_mod.ragged_offsets(np.zeros(degs.shape[0], np.int64), degs)
+    return row_rep, col
+
+
+def _scatter_plane(r_pad: int, w_pad: int, row_rep, col, vals, dtype):
+    plane = np.zeros((r_pad, w_pad), dtype)
+    plane[row_rep, col] = vals
+    return plane
+
+
+def _fill_planes(adj: csr_mod.CSR, rows: np.ndarray, degs: np.ndarray,
+                 r_pad: int, w_pad: int, alive_edges: Optional[np.ndarray]):
+    """Vectorized ELL fill for one group; returns (idx, w, alive)."""
+    row_rep, col = _slot_coords(degs)
+    pos = csr_mod.ragged_offsets(adj.indptr[rows], degs)
+    idx = _scatter_plane(r_pad, w_pad, row_rep, col, adj.indices[pos],
+                         _id_dtype(adj.num_vertices))
+    w = None
+    if adj.weights is not None:
+        w = _scatter_plane(r_pad, w_pad, row_rep, col, adj.weights[pos],
+                           np.float32)
+    alive = None
+    if alive_edges is not None:
+        alive = _scatter_plane(r_pad, w_pad, row_rep, col, alive_edges[pos],
+                               np.int8)
+    return idx, w, alive
+
+
+def refresh_alive(
+    adj: csr_mod.CSR,
+    tiles: Tuple["EllTileGroup", ...],
+    alive_edges: Optional[np.ndarray],
+) -> Tuple["EllTileGroup", ...]:
+    """Rebuild ONLY the alive bitplanes of existing tiles (idx/w untouched).
+
+    This is what makes tombstones cheap on the fused stream path: a deletion
+    batch re-scatters one int8 plane per group instead of repacking the base
+    (no degree binning, no idx/w fills).  ``alive_edges=None`` drops the
+    planes (everything alive again, e.g. after compaction)."""
+    out = []
+    for t in tiles:
+        if alive_edges is None:
+            out.append(t._replace(alive=None))
+            continue
+        rows = np.asarray(t.rows)
+        degs = np.asarray(t.deg)[: rows.shape[0]].astype(np.int64)
+        row_rep, col = _slot_coords(degs)
+        pos = csr_mod.ragged_offsets(adj.indptr[rows], degs)
+        plane = _scatter_plane(t.idx.shape[0], t.idx.shape[1], row_rep, col,
+                               alive_edges[pos], np.int8)
+        out.append(t._replace(alive=jnp.asarray(plane)))
+    return tuple(out)
+
+
+def ell_tiles(
+    adj: csr_mod.CSR,
+    boundaries: Sequence[int],
+    *,
+    row_tile: int = 64,
+    width_tile: int = 128,
+    alive_edges: Optional[np.ndarray] = None,
+) -> Tuple[EllTileGroup, ...]:
+    """Pack one CSR direction into per-DBG-group ELL tiles (host, one pass).
+
+    Rows (owning vertices) are binned by THEIR degree into the geometric
+    ``boundaries`` ranges, so each group's width is at most ~2x its smallest
+    member — the paper's binning doubling as the TPU occupancy structure.
+    Zero-degree rows are skipped (they take the reduction identity in the
+    combine).  ``alive_edges`` is an optional per-edge bool in storage order
+    (the stream base tombstone mask).
+    """
+    from ...core.reorder import _assign_groups
+
+    deg_all = adj.degrees()
+    grp = _assign_groups(deg_all, boundaries)
+    # bin by DBG group, then MERGE bins that land in the same padded width
+    # class: the deg mask already handles intra-group variance, and one tile
+    # set per width class means the V-sized x/frontier vectors are fetched
+    # once per class instead of once per bin (several cold bins share the
+    # fine 8/16-lane widths).
+    by_width = {}
+    for k in range(len(boundaries)):
+        rows = np.where(grp == k)[0]
+        if rows.size == 0:
+            continue
+        degs = deg_all[rows].astype(np.int64)
+        wmax = int(degs.max())
+        if wmax == 0:
+            continue
+        w_pad = _pad_dim(wmax, width_tile)
+        by_width.setdefault(w_pad, []).append((rows, degs))
+    out = []
+    for w_pad, parts in by_width.items():  # insertion order: hottest first
+        rows = np.concatenate([p[0] for p in parts])
+        degs = np.concatenate([p[1] for p in parts])
+        r_pad = _pad_dim(rows.size, row_tile)
+        idx, w, alive = _fill_planes(adj, rows, degs, r_pad, w_pad,
+                                     alive_edges)
+        deg_arr = np.zeros(r_pad, np.int32)
+        deg_arr[: rows.size] = degs
+        out.append(EllTileGroup(
+            rows=jnp.asarray(rows.astype(np.int32)),
+            idx=jnp.asarray(idx),
+            deg=jnp.asarray(deg_arr),
+            w=None if w is None else jnp.asarray(w),
+            alive=None if alive is None else jnp.asarray(alive),
+        ))
+    return tuple(out)
+
+
+def coo_tiles(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: Optional[np.ndarray] = None,
+    alive: Optional[np.ndarray] = None,
+    *,
+    row_tile: int = 64,
+    width_tile: int = 128,
+) -> Tuple[EllTileGroup, ...]:
+    """Group a small COO edge list by destination into ONE ELL tile group.
+
+    The stream delta buffer's fused path: destinations become rows (width =
+    max multiplicity, padded), so the tiny cold segment rides the same kernel
+    as the base tiles instead of paying its own scatter.  Returns () for an
+    empty list.
+    """
+    if src.shape[0] == 0:
+        return ()
+    order = np.argsort(dst, kind="stable")
+    dsts = dst[order]
+    rows, degs = np.unique(dsts, return_counts=True)
+    w_pad = _pad_dim(int(degs.max()), width_tile)
+    r_pad = _pad_dim(rows.shape[0], row_tile)
+    row_rep, col = _slot_coords(degs)
+    num_vertices = int(max(src.max(initial=0), dsts.max(initial=0))) + 1
+    idx = _scatter_plane(r_pad, w_pad, row_rep, col, src[order],
+                         _id_dtype(num_vertices))
+    wp = None if w is None else _scatter_plane(
+        r_pad, w_pad, row_rep, col, w[order], np.float32)
+    ap = None if alive is None else _scatter_plane(
+        r_pad, w_pad, row_rep, col, alive[order], np.int8)
+    deg_arr = np.zeros(r_pad, np.int32)
+    deg_arr[: rows.shape[0]] = degs
+    return (EllTileGroup(
+        rows=jnp.asarray(rows.astype(np.int32)),
+        idx=jnp.asarray(idx),
+        deg=jnp.asarray(deg_arr),
+        w=None if wp is None else jnp.asarray(wp),
+        alive=None if ap is None else jnp.asarray(ap),
+    ),)
+
+
+def _scatter_combine(out: jnp.ndarray, rows: jnp.ndarray, vals: jnp.ndarray,
+                     reduce: str) -> jnp.ndarray:
+    if reduce == "sum":
+        return out.at[rows].add(vals)
+    if reduce == "min":
+        return out.at[rows].min(vals)
+    return out.at[rows].max(vals)
+
+
+def fused_edge_map(
+    tiles: Tuple[EllTileGroup, ...],
+    x: jnp.ndarray,
+    num_vertices: int,
+    *,
+    reduce: str = "sum",
+    src_frontier: Optional[jnp.ndarray] = None,
+    use_weights: bool = False,
+    neutral: float = 0.0,
+    init: Optional[jnp.ndarray] = None,
+    identity: Optional[float] = None,
+    extra_tiles: Tuple[EllTileGroup, ...] = (),
+    row_tile: int = 64,
+    width_tile: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full fused edge map: per-group kernels + O(V) combine.
+
+    Pull mode (``init is None``): every vertex lands in exactly one primary
+    group; uncovered (zero-degree) vertices take the reduction identity —
+    matching the flat engine's empty segments.  Push mode (``init`` given):
+    the accumulator is seeded per-row inside the kernel, fusing the separate
+    ``init.at[dst].op`` scatter.  ``extra_tiles`` (delta segments whose rows
+    duplicate primary rows) fold in with the reduction's scatter-op.
+    """
+    if identity is None:
+        identity = REDUCE_IDENTITY[reduce]
+    frontier = None
+    if src_frontier is not None:
+        frontier = src_frontier.astype(jnp.int8)
+    out = jnp.full((num_vertices,), identity, x.dtype) if init is None \
+        else init.astype(x.dtype)
+    for t in tiles:
+        r_pad, w_pad = t.idx.shape
+        init_rows = None
+        if init is not None:
+            init_rows = jnp.full((r_pad,), identity, x.dtype).at[
+                : t.num_rows].set(out[t.rows])
+        y = ell_edge_map_pallas(
+            x, t.idx, t.deg,
+            reduce=reduce,
+            w=t.w if use_weights else None,
+            unit_weights=use_weights,
+            frontier=frontier,
+            alive=t.alive,
+            init_rows=init_rows,
+            neutral=neutral,
+            identity=identity,
+            row_tile=_tile_of(r_pad, row_tile),
+            width_tile=_tile_of(w_pad, width_tile),
+            interpret=interpret,
+        )
+        out = out.at[t.rows].set(y[: t.num_rows])
+    for t in extra_tiles:
+        r_pad, w_pad = t.idx.shape
+        y = ell_edge_map_pallas(
+            x, t.idx, t.deg,
+            reduce=reduce,
+            w=t.w if use_weights else None,
+            unit_weights=use_weights,
+            frontier=frontier,
+            alive=t.alive,
+            neutral=neutral,
+            identity=identity,
+            row_tile=_tile_of(r_pad, row_tile),
+            width_tile=_tile_of(w_pad, width_tile),
+            interpret=interpret,
+        )
+        out = _scatter_combine(out, t.rows, y[: t.num_rows], reduce)
+    return out
+
+
+def fused_edge_map_bytes(
+    tiles: Tuple[EllTileGroup, ...],
+    num_vertices: int,
+    *,
+    use_weights: bool = False,
+    frontier: bool = False,
+    push_init: bool = False,
+    extra_tiles: Tuple[EllTileGroup, ...] = (),
+) -> int:
+    """Single-pass HBM bytes of one fused edge map (sum of tile CostEstimates
+    plus the O(V) combine write) — the number BENCH_apps.json reports."""
+    total = num_vertices * 4  # combine write
+    for t in tuple(tiles) + tuple(extra_tiles):
+        r_pad, w_pad = t.idx.shape
+        total += edge_map_tile_bytes(
+            r_pad, w_pad, num_vertices,
+            weighted=use_weights and t.w is not None,
+            frontier=frontier,
+            alive=t.alive is not None,
+            init=push_init,
+            idx_itemsize=t.idx.dtype.itemsize)
+    return total

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the fused edge-map kernel (same masking semantics)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .edge_map import REDUCE_IDENTITY
+
+__all__ = ["ell_edge_map_ref"]
+
+
+def ell_edge_map_ref(
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    deg: jnp.ndarray,
+    *,
+    reduce: str = "sum",
+    w: Optional[jnp.ndarray] = None,
+    unit_weights: bool = False,
+    frontier: Optional[jnp.ndarray] = None,
+    alive: Optional[jnp.ndarray] = None,
+    init_rows: Optional[jnp.ndarray] = None,
+    neutral: float = 0.0,
+    identity: Optional[float] = None,
+) -> jnp.ndarray:
+    if identity is None:
+        identity = REDUCE_IDENTITY[reduce]
+    r, width = idx.shape
+    vals = x[idx]
+    if w is not None:
+        vals = vals + w
+    elif unit_weights:
+        vals = vals + jnp.asarray(1.0, vals.dtype)
+    if frontier is not None:
+        vals = jnp.where(frontier[idx] > 0, vals, neutral)
+    valid = jnp.arange(width, dtype=jnp.int32)[None, :] < deg[:, None]
+    if alive is not None:
+        valid = jnp.logical_and(valid, alive > 0)
+    vals = jnp.where(valid, vals, identity)
+    acc = jnp.full((r,), identity, x.dtype) if init_rows is None else init_rows
+    if reduce == "sum":
+        return acc + jnp.sum(vals, axis=1)
+    if reduce == "min":
+        return jnp.minimum(acc, jnp.min(vals, axis=1))
+    return jnp.maximum(acc, jnp.max(vals, axis=1))

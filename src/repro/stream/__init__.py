@@ -23,7 +23,9 @@ from .incremental import (  # noqa: F401
     StreamArrays,
     edge_map_pull_stream,
     edge_map_push_stream,
+    edge_map_push_stream_fused,
     stream_arrays,
+    stream_push_tiles,
 )
 from .regroup import IncrementalDBG, RemapDelta  # noqa: F401
 from .service import (  # noqa: F401

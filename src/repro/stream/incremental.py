@@ -45,6 +45,8 @@ __all__ = [
     "stream_arrays",
     "edge_map_pull_stream",
     "edge_map_push_stream",
+    "stream_push_tiles",
+    "edge_map_push_stream_fused",
     "IncrementalPageRank",
     "IncrementalSSSP",
 ]
@@ -235,6 +237,110 @@ def edge_map_push_stream(
 
 
 # ---------------------------------------------------------------------------
+# Fused base+delta push (kernels.edge_map K5 over the stream layout)
+# ---------------------------------------------------------------------------
+
+def stream_push_tiles(dg: DeltaGraph, *, row_tile: int = 64,
+                      width_tile: int = 128):
+    """(base_tiles, delta_tiles) for the fused stream push.
+
+    The base in-direction is packed once per base snapshot into DBG-ELL
+    tiles — tombstones ride as an alive bitplane that is re-scattered (idx/w
+    planes untouched) when the tombstone count moves, so a deletion does NOT
+    force repacking between compactions.  The pending delta buffer (tiny,
+    cold) becomes one dst-grouped ELL group per refresh and runs through the
+    SAME fused kernel as a second segment, replacing the separate O(E_base)
+    + O(D) scatters of ``edge_map_push_stream``.
+    """
+    from ..core.reorder import dbg_spec
+    from ..kernels.edge_map.ops import coo_tiles, ell_tiles, refresh_alive
+
+    # Two-level cache, base compared by IDENTITY (Graph holds arrays; ==
+    # would be elementwise).  Level 1: the expensive structural pack (degree
+    # binning + idx/w fills), invalidated only by compaction.  Level 2: the
+    # alive bitplanes, re-scattered when the tombstone count moves — a
+    # deletion batch never repacks the base.
+    in_csr = dg.base.in_csr
+    struct = getattr(dg, "_push_tile_struct", None)
+    if (struct is None or struct[0] is not dg.base
+            or struct[1] != (row_tile, width_tile)):
+        deg = in_csr.degrees()
+        spec = dbg_spec(max(1.0, float(deg.mean()) if deg.size else 1.0))
+        tiles = ell_tiles(in_csr, spec.boundaries, row_tile=row_tile,
+                          width_tile=width_tile)
+        struct = (dg.base, (row_tile, width_tile), tiles)
+        dg._push_tile_struct = struct
+        dg._push_tile_alive = None
+    alive_cache = getattr(dg, "_push_tile_alive", None)
+    if alive_cache is None or alive_cache[0] != dg.dead_base_edges:
+        tiles = struct[2]
+        if dg.dead_base_edges:
+            tiles = refresh_alive(in_csr, tiles,
+                                  np.asarray(dg.in_alive_mask()))
+        alive_cache = (dg.dead_base_edges, tiles)
+        dg._push_tile_alive = alive_cache
+    base_tiles = alive_cache[1]
+    ex_src, ex_dst, ex_w, ex_alive = dg.extras()
+    delta_tiles = coo_tiles(
+        np.asarray(ex_src), np.asarray(ex_dst), w=np.asarray(ex_w),
+        alive=np.asarray(ex_alive), row_tile=row_tile, width_tile=width_tile)
+    return base_tiles, delta_tiles
+
+
+def edge_map_push_stream_fused(
+    base_tiles,
+    delta_tiles,
+    prop: jnp.ndarray,
+    num_vertices: int,
+    *,
+    reduce: str = "sum",
+    src_frontier: Optional[jnp.ndarray] = None,
+    use_weights: bool = False,
+    init: Optional[jnp.ndarray] = None,
+    row_tile: int = 64,
+    width_tile: int = 128,
+    interpret: bool = True,
+):
+    """Fused-kernel twin of :func:`edge_map_push_stream` (base + delta in one
+    kernel family, no edge-parallel scatter).  Masked edges always take the
+    reduction's identity element — the stream engine's default ``neutral`` —
+    which is what lets tombstones and frontier share one in-kernel mask."""
+    from ..kernels.edge_map.ops import fused_edge_map
+
+    red = "max" if reduce == "or" else reduce
+    neutral = _NEUTRAL[reduce]
+    if init is None:
+        init = jnp.full((num_vertices,), neutral, dtype=prop.dtype)
+    return fused_edge_map(
+        base_tiles, prop, num_vertices,
+        reduce=red, src_frontier=src_frontier, use_weights=use_weights,
+        neutral=neutral, init=init, extra_tiles=delta_tiles,
+        row_tile=row_tile, width_tile=width_tile, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "row_tile", "width_tile"))
+def _sssp_converge_fused(base_tiles, delta_tiles, dist, frontier,
+                         max_iters: int, row_tile: int = 64,
+                         width_tile: int = 128):
+    """Frontier Bellman-Ford with the fused base+delta push kernel."""
+    v = dist.shape[0]
+
+    def cond(state):
+        _, f, it = state
+        return jnp.logical_and(it < max_iters, jnp.any(f))
+
+    def body(state):
+        dist, frontier, it = state
+        cand = edge_map_push_stream_fused(
+            base_tiles, delta_tiles, dist, v, reduce="min",
+            src_frontier=frontier, use_weights=True, init=dist,
+            row_tile=row_tile, width_tile=width_tile)
+        return cand, cand < dist, it + 1
+
+    return jax.lax.while_loop(cond, body, (dist, frontier, 0))
+
+
+# ---------------------------------------------------------------------------
 # Incremental PageRank
 # ---------------------------------------------------------------------------
 
@@ -414,12 +520,20 @@ def _sssp_converge(sa: StreamArrays, dist, frontier, max_iters: int):
 
 
 class IncrementalSSSP:
-    """SSSP with insertion-driven relaxation and deletion fallback."""
+    """SSSP with insertion-driven relaxation and deletion fallback.
 
-    def __init__(self, dg: DeltaGraph, root: int, *, max_iters: int = 0):
+    ``use_fused_push=True`` routes the convergence loop through the fused
+    base+delta Pallas push kernel (``stream_push_tiles`` +
+    ``_sssp_converge_fused``) instead of the edge-parallel scatters —
+    identical results (min-relaxation is exactly associative).
+    """
+
+    def __init__(self, dg: DeltaGraph, root: int, *, max_iters: int = 0,
+                 use_fused_push: bool = False):
         self.dg = dg
         self.root = int(root)
         self.max_iters = max_iters
+        self.use_fused_push = bool(use_fused_push)
         self.dist: Optional[np.ndarray] = None
         self._pending_src: list = []
         self._pending_dst: list = []
@@ -555,8 +669,14 @@ class IncrementalSSSP:
                 self._clear_pending()
                 self.last_iters = 0
                 return 0
-        dist, _, it = _sssp_converge(stream_arrays(dg), jnp.asarray(dist0),
-                                     jnp.asarray(frontier0), max_iters)
+        if self.use_fused_push:
+            base_tiles, delta_tiles = stream_push_tiles(dg)
+            dist, _, it = _sssp_converge_fused(
+                base_tiles, delta_tiles, jnp.asarray(dist0),
+                jnp.asarray(frontier0), max_iters)
+        else:
+            dist, _, it = _sssp_converge(stream_arrays(dg), jnp.asarray(dist0),
+                                         jnp.asarray(frontier0), max_iters)
         self.dist = np.asarray(dist)
         self._needs_full = False
         self._clear_pending()

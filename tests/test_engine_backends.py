@@ -1,0 +1,262 @@
+"""Backend agreement: FlatBackend (oracle) vs EllBackend (fused Pallas).
+
+The contract of the pluggable engine: min/max reductions are BIT-identical
+across backends (exactly associative, identity-element padding), sum agrees
+to fp-association tolerance (~1e-6 relative).  Checked as a hypothesis
+property over random generator graphs × all four orderings × weighted /
+unweighted × dense / sparse frontiers, plus app-level and kernel-level cases.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import (bc, pagerank, pagerank_delta, radii, sssp, to_arrays)
+from repro.apps.engine import (EllBackend, FlatBackend, GraphArrays,
+                               edge_map_pull, edge_map_push)
+from repro.core import reorder
+from repro.graph import csr, datasets
+
+ORDERINGS = ("original", "sort", "hubcluster", "dbg")
+
+
+def _rand_graph(n, e, seed, weighted):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    w = rng.random(e).astype(np.float32) + 0.01 if weighted else None
+    return csr.from_edges(src, dst, n, weights=w)
+
+
+def _assert_agree(flat, fused, reduce):
+    flat, fused = np.asarray(flat), np.asarray(fused)
+    if reduce in ("min", "max", "or"):
+        np.testing.assert_array_equal(flat, fused)
+    else:
+        scale = 1.0 + np.abs(flat[np.isfinite(flat)]).max(initial=0.0)
+        np.testing.assert_allclose(flat, fused, atol=2e-6 * scale)
+
+
+@st.composite
+def _case(draw):
+    n = draw(st.integers(8, 96))
+    e = draw(st.integers(1, 12)) * n
+    seed = draw(st.integers(0, 10_000))
+    weighted = draw(st.integers(0, 1)) == 1
+    ordering = draw(st.sampled_from(ORDERINGS))
+    reduce = draw(st.sampled_from(["sum", "min", "max"]))
+    density = draw(st.sampled_from([None, 0.05, 0.5, 1.0]))
+    return n, e, seed, weighted, ordering, reduce, density
+
+
+@settings(max_examples=20, deadline=None)
+@given(_case())
+def test_flat_vs_ell_property(case):
+    n, e, seed, weighted, ordering, reduce, density = case
+    g = _rand_graph(n, e, seed, weighted)
+    if ordering != "original":
+        g = csr.relabel(g, reorder.TECHNIQUES[ordering](g.out_degrees()).mapping)
+    fb = to_arrays(g)
+    eb = to_arrays(g, backend="ell")
+    rng = np.random.default_rng(seed + 1)
+    prop = jnp.asarray(rng.random(n).astype(np.float32))
+    frontier = None
+    if density is not None:
+        frontier = jnp.asarray(rng.random(n) < density)
+    neutral = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}[reduce]
+    kw = dict(reduce=reduce, src_frontier=frontier,
+              use_weights=weighted, neutral=neutral)
+    _assert_agree(edge_map_pull(fb, prop, **kw),
+                  edge_map_pull(eb, prop, **kw), reduce)
+    init = jnp.asarray(rng.random(n).astype(np.float32)) \
+        if reduce != "sum" else None
+    _assert_agree(edge_map_push(fb, prop, init=init, **kw),
+                  edge_map_push(eb, prop, init=init, **kw), reduce)
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return datasets.load("lj", "test")
+
+
+@pytest.fixture(scope="module")
+def weighted_graph():
+    return datasets.load_weighted("lj", "test")
+
+
+def test_to_arrays_backends(small_graph):
+    fb = to_arrays(small_graph)
+    assert isinstance(fb, FlatBackend)
+    assert isinstance(to_arrays(small_graph, backend="ell"), EllBackend)
+    assert isinstance(to_arrays(small_graph, backend="arrays"), GraphArrays)
+    with pytest.raises(ValueError):
+        to_arrays(small_graph, backend="nope")
+
+
+def test_unweighted_weight_plane_is_shared(small_graph, weighted_graph):
+    ga = to_arrays(small_graph, backend="arrays")
+    assert ga.in_w is ga.out_w  # one O(E) ones plane, not two
+    gaw = to_arrays(weighted_graph, backend="arrays")
+    assert gaw.in_w is not gaw.out_w
+
+
+def test_ell_tiles_drop_weight_plane_when_unweighted(small_graph,
+                                                     weighted_graph):
+    eb = to_arrays(small_graph, backend="ell")
+    assert all(t.w is None for t in eb.in_tiles)
+    ebw = to_arrays(weighted_graph, backend="ell")
+    assert all(t.w is not None for t in ebw.in_tiles)
+
+
+def test_all_apps_agree_across_backends(small_graph, weighted_graph):
+    fb = to_arrays(small_graph)
+    eb = to_arrays(small_graph, backend="ell")
+    fbw = to_arrays(weighted_graph)
+    ebw = to_arrays(weighted_graph, backend="ell")
+
+    r1, _ = pagerank(fb)
+    r2, _ = pagerank(eb)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-7)
+
+    p1, _ = pagerank_delta(fb)
+    p2, _ = pagerank_delta(eb)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-7)
+
+    d1, _ = sssp(fbw, jnp.int32(0))
+    d2, _ = sssp(ebw, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))  # bitwise
+
+    c1, dist1, l1 = bc(fb, jnp.int32(0))
+    c2, dist2, l2 = bc(eb, jnp.int32(0))
+    assert int(l1) == int(l2)
+    np.testing.assert_array_equal(np.asarray(dist1), np.asarray(dist2))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               rtol=1e-5, atol=1e-5)
+
+    ra1, i1 = radii(fb, jnp.int32(0), num_samples=4)
+    ra2, i2 = radii(eb, jnp.int32(0), num_samples=4)
+    assert int(i1) == int(i2)
+    np.testing.assert_array_equal(np.asarray(ra1), np.asarray(ra2))
+
+
+def test_radii_2d_pull_parity(small_graph):
+    """(V, S) int8 pull — the multi-word property pattern of Table VIII."""
+    fb = to_arrays(small_graph)
+    eb = to_arrays(small_graph, backend="ell")
+    rng = np.random.default_rng(0)
+    reach = jnp.asarray((rng.random((small_graph.num_vertices, 4)) < 0.2)
+                        .astype(np.int8))
+    a = edge_map_pull(fb, reach, reduce="or")
+    b = edge_map_pull(eb, reach, reduce="or")
+    assert a.dtype == b.dtype
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("direction_optimizing", [False, True])
+def test_sssp_direction_optimizing_bitwise(weighted_graph,
+                                           direction_optimizing):
+    """The pull/push switch is a traffic choice, never a numeric one."""
+    fbw = to_arrays(weighted_graph)
+    base, _ = sssp(fbw, jnp.int32(0), direction_optimizing=False)
+    d, _ = sssp(fbw, jnp.int32(0),
+                direction_optimizing=direction_optimizing)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(d))
+
+
+def test_bc_direction_optimizing_agrees(small_graph):
+    fb = to_arrays(small_graph)
+    c1, dist1, l1 = bc(fb, jnp.int32(0), direction_optimizing=False)
+    c2, dist2, l2 = bc(fb, jnp.int32(0), direction_optimizing=True)
+    assert int(l1) == int(l2)
+    np.testing.assert_array_equal(np.asarray(dist1), np.asarray(dist2))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_reordering_invariance_on_ell_backend(small_graph):
+    """The paper's premise holds on the fused backend too: reordering only
+    relabels."""
+    g = small_graph
+    g2, res = reorder.reorder_graph(g, "dbg", seed=1)
+    r1, _ = pagerank(to_arrays(g, backend="ell"))
+    r2, _ = pagerank(to_arrays(g2, backend="ell"))
+    np.testing.assert_allclose(np.asarray(r2)[res.mapping], np.asarray(r1),
+                               atol=2e-5)
+
+
+# ------------------------------------------------------------------ kernel unit
+def test_kernel_matches_ref():
+    from repro.kernels.edge_map import ell_edge_map_pallas, ell_edge_map_ref
+
+    rng = np.random.default_rng(3)
+    v, r, w = 256, 24, 40
+    x = jnp.asarray(rng.random(v).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, v, (r, w)).astype(np.int32))
+    deg = jnp.asarray(rng.integers(0, w + 1, r).astype(np.int32))
+    wgt = jnp.asarray(rng.random((r, w)).astype(np.float32))
+    frontier = jnp.asarray((rng.random(v) < 0.4).astype(np.int8))
+    alive = jnp.asarray((rng.random((r, w)) < 0.8).astype(np.int8))
+    init = jnp.asarray(rng.random(r).astype(np.float32))
+    # pad to the 8-lane fine granularity the packer emits
+    idx = jnp.pad(idx, ((0, 0), (0, 8 - w % 8)))
+    wgt = jnp.pad(wgt, ((0, 0), (0, 8 - w % 8)))
+    alive = jnp.pad(alive, ((0, 0), (0, 8 - w % 8)))
+    for reduce, neutral in [("sum", 0.0), ("min", np.inf), ("max", -np.inf)]:
+        kw = dict(reduce=reduce, w=wgt, frontier=frontier, alive=alive,
+                  init_rows=init, neutral=neutral)
+        got = ell_edge_map_pallas(x, idx, deg, row_tile=8, width_tile=16, **kw)
+        ref = ell_edge_map_ref(x, idx, deg, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------------ stream path
+def test_stream_fused_push_matches_flat():
+    from repro.stream import (DeltaGraph, edge_map_push_stream,
+                              edge_map_push_stream_fused, stream_arrays,
+                              stream_push_tiles)
+
+    g = datasets.load_weighted("kr", "test")
+    dg = DeltaGraph(g)
+    rng = np.random.default_rng(0)
+    v = g.num_vertices
+    es, ed, _ = dg.alive_edges()
+    dg.apply(add_src=rng.integers(0, v, 200), add_dst=rng.integers(0, v, 200),
+             add_w=rng.random(200).astype(np.float32),
+             del_src=es[:40], del_dst=ed[:40])
+    sa = stream_arrays(dg)
+    bt, dt = stream_push_tiles(dg)
+    prop = jnp.asarray(rng.random(v).astype(np.float32))
+    frontier = jnp.asarray(rng.random(v) < 0.5)
+    for reduce, uw in [("sum", False), ("min", True), ("max", False)]:
+        ref = edge_map_push_stream(sa, prop, reduce=reduce,
+                                   src_frontier=frontier, use_weights=uw)
+        got = edge_map_push_stream_fused(bt, dt, prop, v, reduce=reduce,
+                                         src_frontier=frontier, use_weights=uw)
+        _assert_agree(ref, got, reduce)
+
+
+def test_incremental_sssp_fused_push_bitwise():
+    from repro.stream import DeltaGraph, IncrementalSSSP
+
+    g = datasets.load_weighted("lj", "test")
+    v = g.num_vertices
+    rng = np.random.default_rng(1)
+    dg_a, dg_b = DeltaGraph(g), DeltaGraph(g)
+    flat = IncrementalSSSP(dg_a, 0)
+    fused = IncrementalSSSP(dg_b, 0, use_fused_push=True)
+    for b in range(3):
+        s, d = rng.integers(0, v, 80), rng.integers(0, v, 80)
+        w = rng.random(80).astype(np.float32)
+        kw = {}
+        if b:  # later batches also delete base edges: exercises the
+            # alive-bitplane refresh without a structural repack
+            es, ed, _ = dg_a.alive_edges()
+            pick = rng.choice(es.shape[0], size=20, replace=False)
+            kw = dict(del_src=es[pick], del_dst=ed[pick])
+        flat.ingest(dg_a.apply(add_src=s, add_dst=d, add_w=w, **kw))
+        fused.ingest(dg_b.apply(add_src=s, add_dst=d, add_w=w, **kw))
+        np.testing.assert_array_equal(flat.query(), fused.query())
+    # the structural pack must have survived every batch (bitplane-only
+    # rebuilds); it is keyed on the base snapshot identity
+    assert dg_b._push_tile_struct[0] is dg_b.base
