@@ -6,9 +6,18 @@ without DBG hot-vertex replication, on the ``kr`` (unstructured RMAT) and
 paper's cache experiments: replication shrinks the cold-halo all_to_all the
 way DBG shrinks the hot working set.
 
+Since PR 5 the grid carries a ``--backends`` axis (names resolved through
+``apps.engine.BACKENDS``): ``flat`` is the edge-parallel per-shard path,
+``ell`` the fused per-shard DBG-ELL Pallas path.  Every cell reports the
+analytic per-shard HBM bytes of one pull iteration for its backend
+(``edge_map_bytes_sharded``), and a ``bytes_registry`` section prices
+flat-vs-fused per-shard bytes on EVERY registry graph (host-side only — no
+devices needed), which is the acceptance column: fused ≤ flat everywhere.
+
 Usage:
   PYTHONPATH=src python benchmarks/dist_scaling.py [--scale small]
-      [--datasets kr,lj] [--iters 20] [--reps 3] [--out BENCH_dist.json]
+      [--datasets kr,lj] [--iters 20] [--reps 3] [--backends flat,ell]
+      [--out BENCH_dist.json]
 """
 import os
 
@@ -36,10 +45,12 @@ from repro.graph import datasets
 POLICIES = ("replicate_hot", "partition")
 
 
-def bench_cell(ga, n_dev: int, policy: str, iters: int, reps: int):
+def bench_cell(ga, n_dev: int, policy: str, backend: str, iters: int,
+               reps: int):
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_dev]),
                              (dist_graph.AXIS,))
-    sg = dist_graph.shard_graph(ga, n_dev, policy=policy)
+    sg = dist_graph.shard_graph(ga, n_dev, policy=policy, backend=backend,
+                                track_remap=False)
     # tol=-1 forces exactly `iters` iterations — stable work per rep
     run = lambda: dist_graph.pagerank_sharded(sg, mesh, max_iters=iters,
                                               tol=-1.0)
@@ -54,13 +65,53 @@ def bench_cell(ga, n_dev: int, policy: str, iters: int, reps: int):
     return {
         "n_devices": n_dev,
         "policy": policy,
+        "backend": backend,
         "seconds_per_run": dt,
         "edges_per_second": edges / dt,
         "iters": iters,
+        "pull_bytes_per_shard": dist_graph.edge_map_bytes_sharded(
+            sg, mode="pull", backend=backend),
         **{k: sg.stats[k] for k in
            ("n_hot", "hot_frac", "halo_slots", "halo_bytes_padded",
             "edges_per_shard_max")},
     }
+
+
+def bytes_registry(scale: str, backends, n_shards: int = 4) -> dict:
+    """Flat-vs-fused per-shard pull/push bytes on every registry graph.
+
+    Pure host-side accounting (shard + tile-pack + the analytic byte model),
+    so it covers the full Table IX/X registry regardless of device count.
+    """
+    out = {"n_shards": n_shards, "per_dataset": {}}
+    worst = 0.0
+    for key in datasets.REGISTRY:
+        g = datasets.load(key, scale, seed=0)
+        ga = engine.to_arrays(g, backend="arrays")
+        sg = dist_graph.shard_graph(ga, n_shards, backend="ell",
+                                    track_remap=False)
+        cell = {}
+        for b in backends:
+            cell[b] = {
+                "pull_bytes_per_shard": dist_graph.edge_map_bytes_sharded(
+                    sg, mode="pull", backend=b),
+                "push_bytes_per_shard": dist_graph.edge_map_bytes_sharded(
+                    sg, mode="push", backend=b),
+            }
+        if "flat" in cell and "ell" in cell:
+            r = max(cell["ell"]["pull_bytes_per_shard"]
+                    / cell["flat"]["pull_bytes_per_shard"],
+                    cell["ell"]["push_bytes_per_shard"]
+                    / cell["flat"]["push_bytes_per_shard"])
+            cell["fused_over_flat_worst"] = r
+            worst = max(worst, r)
+        out["per_dataset"][key] = cell
+        print(f"[dist_scaling] bytes {key}: "
+              + " ".join(f"{b} pull {cell[b]['pull_bytes_per_shard']/1e3:.0f}K"
+                         for b in backends), flush=True)
+    out["fused_bytes_le_flat_all"] = worst <= 1.0 if worst else None
+    out["fused_over_flat_worst"] = worst
+    return out
 
 
 def main() -> None:
@@ -70,10 +121,18 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--devices", default="1,2,4,8")
+    ap.add_argument("--backends", default="flat,ell",
+                    help="comma list resolved through apps.engine.BACKENDS")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_dist.json"))
     args = ap.parse_args()
+    backends = args.backends.split(",")
+    for b in backends:  # fail fast on unknown names, via the one registry
+        engine.resolve_backend(b)
+        if b not in dist_graph.SHARDED_BACKENDS:
+            raise SystemExit(f"backend {b!r} not supported by the sharded "
+                             f"engine ({'|'.join(dist_graph.SHARDED_BACKENDS)})")
 
     n_avail = len(jax.devices())
     requested = [int(x) for x in args.devices.split(",")]
@@ -89,27 +148,36 @@ def main() -> None:
            "platform": jax.devices()[0].platform, "cells": []}
     for key in args.datasets.split(","):
         g = datasets.load(key, args.scale, seed=3)
-        ga = engine.to_arrays(g)
+        ga = engine.to_arrays(g, backend="arrays")
         print(f"[dist_scaling] {key}: V={g.num_vertices} E={g.num_edges}",
               flush=True)
         base = {}
         for policy in POLICIES:
-            for n in dev_counts:
-                cell = bench_cell(ga, n, policy, args.iters, args.reps)
-                cell["dataset"] = key
-                if n == 1:
-                    base[policy] = cell["seconds_per_run"]
-                if policy in base:  # only meaningful vs a real 1-device run
-                    cell["speedup_vs_1dev"] = (base[policy]
-                                               / cell["seconds_per_run"])
-                out["cells"].append(cell)
-                print(f"[dist_scaling] {key} {policy} x{n}: "
-                      f"{cell['edges_per_second']/1e6:.1f} Me/s "
-                      f"(halo {cell['halo_slots']}, "
-                      f"hot {cell['hot_frac']:.1%})", flush=True)
+            for backend in backends:
+                for n in dev_counts:
+                    cell = bench_cell(ga, n, policy, backend, args.iters,
+                                      args.reps)
+                    cell["dataset"] = key
+                    bkey = (policy, backend)
+                    if n == 1:
+                        base[bkey] = cell["seconds_per_run"]
+                    if bkey in base:  # only meaningful vs a real 1-device run
+                        cell["speedup_vs_1dev"] = (base[bkey]
+                                                   / cell["seconds_per_run"])
+                    out["cells"].append(cell)
+                    print(f"[dist_scaling] {key} {policy}/{backend} x{n}: "
+                          f"{cell['edges_per_second']/1e6:.1f} Me/s "
+                          f"(halo {cell['halo_slots']}, "
+                          f"hot {cell['hot_frac']:.1%}, pull "
+                          f"{cell['pull_bytes_per_shard']/1e6:.2f} MB/shard)",
+                          flush=True)
+    if "ell" in backends:  # the flat-only grid doesn't need ELL tile packs
+        out["bytes_registry"] = bytes_registry(args.scale, backends)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
-    print(f"[dist_scaling] wrote {args.out}", flush=True)
+    print(f"[dist_scaling] wrote {args.out} (fused_bytes_le_flat_all="
+          f"{out.get('bytes_registry', {}).get('fused_bytes_le_flat_all')})",
+          flush=True)
 
 
 if __name__ == "__main__":

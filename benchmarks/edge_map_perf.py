@@ -157,13 +157,18 @@ def bench_cell(g2, *, reps: int) -> dict:
     return cell
 
 
-def bench_apps(g2, gw2, *, reps: int) -> dict:
-    """All five apps on both backends (per-iteration wall time, agreement)."""
+def bench_apps(g2, gw2, *, reps: int, backend_names=("flat", "ell")) -> dict:
+    """All five apps on both backends (per-iteration wall time, agreement).
+
+    Backend names resolve through ``apps.engine.BACKENDS`` — the same table
+    ``to_arrays`` and the sharded engine use — so an unknown name fails with
+    the registry's error instead of silently benchmarking nothing.
+    """
+    from repro.apps.engine import resolve_backend
+
     out = {}
-    backends = {
-        "flat": (to_arrays(g2), to_arrays(gw2)),
-        "ell": (to_arrays(g2, backend="ell"), to_arrays(gw2, backend="ell")),
-    }
+    backends = {name: (resolve_backend(name)(g2), resolve_backend(name)(gw2))
+                for name in backend_names}
     runs = {
         "pr": lambda b, bw: pagerank(b),
         "prd": lambda b, bw: pagerank_delta(b),

@@ -195,6 +195,77 @@ def sweep_hysteresis(key: str, scale: str, batch_size: int, num_batches: int,
     return cells
 
 
+def bench_dist_remap(key: str, scale: str, batch_size: int, num_batches: int,
+                     seed: int = 3, n_shards: int = 4):
+    """Shard-aware update routing vs full re-shard (the PR 5 acceptance row).
+
+    A sharded deployment tracking a live stream used to re-shard from a full
+    mapping whenever the grouping drifted; ``StreamService.apply_remaps_to``
+    now patches only the group-crossers (``dist.graph.apply_remap``).  Per
+    backend: mean per-batch patch cost vs one full ``shard_graph`` rebuild
+    with the same final hot set — host-side work on both sides, no devices.
+    """
+    from repro.apps import engine as apps_engine
+    from repro.dist import graph as dist_graph
+
+    g = datasets.load(key, scale, seed=seed)
+    ga = apps_engine.to_arrays(g, backend="arrays")
+    cells = []
+    for backend in ("flat", "ell"):
+        # two identical passes over the same deterministic stream (the
+        # bench_cell idiom): the first absorbs the one-time XLA compiles of
+        # the slot/tile patch scatters, the second is timed
+        for warmup in (True, False):
+            svc = StreamService(g, StreamConfig(regroup_every=1))
+            stream = ChurnStream(g, seed=seed)
+            sg = dist_graph.shard_graph(ga, n_shards, backend=backend,
+                                        remap_headroom=1.0)
+            remap_s, overflows = [], 0
+            for _ in range(num_batches):
+                a_s, a_d, d_s, d_d = stream.next_batch(svc.dg, batch_size)
+                svc.ingest(add_src=a_s, add_dst=a_d,
+                           del_src=d_s, del_dst=d_d)
+                t0 = time.perf_counter()
+                try:
+                    sg = svc.apply_remaps_to(sg)
+                except dist_graph.RemapOverflow:
+                    # rebuild around the regrouper's LIVE hot set (a default
+                    # rebuild would revert to the stale static mask); the
+                    # unconsumed deltas then replay as no-ops
+                    overflows += 1
+                    sg = dist_graph.shard_graph(
+                        ga, n_shards, backend=backend, remap_headroom=1.0,
+                        hot_override=svc.regrouper.hot_ids(
+                            sg.hot_group_count))
+                    sg = svc.apply_remaps_to(sg)
+                remap_s.append(time.perf_counter() - t0)
+        hot = np.flatnonzero(sg.host["hot_pos"] >= 0)
+        t0 = time.perf_counter()
+        dist_graph.shard_graph(ga, n_shards, backend=backend,
+                               hot_override=hot, remap_headroom=1.0)
+        full_s = time.perf_counter() - t0
+        cell = {
+            "dataset": key,
+            "backend": backend,
+            "n_shards": n_shards,
+            "batch_size": batch_size,
+            "num_batches": num_batches,
+            "moved_total": int(sum(d.num_moved for d in svc.remap_deltas)),
+            "apply_remap_seconds_per_batch": float(np.mean(remap_s)),
+            "full_reshard_seconds": full_s,
+            "remap_vs_reshard_ratio": float(np.mean(remap_s))
+                                      / max(1e-12, full_s),
+            "overflows": overflows,
+        }
+        cells.append(cell)
+        print(f"[stream_churn] dist-remap {key}/{backend}: "
+              f"{cell['apply_remap_seconds_per_batch']*1e3:.2f} ms/batch vs "
+              f"full re-shard {full_s*1e3:.1f} ms "
+              f"(ratio {cell['remap_vs_reshard_ratio']:.3f}, "
+              f"{cell['moved_total']} moved)", flush=True)
+    return cells
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", default="kr,uni")
@@ -241,6 +312,10 @@ def main() -> None:
             # the band (small batches rarely push a vertex past any margin)
             out["hysteresis_sweep"].extend(sweep_hysteresis(
                 key, args.scale, max(batch_sizes), args.batches, h_values))
+    out["dist_remap"] = []
+    for key in args.datasets.split(","):
+        out["dist_remap"].extend(bench_dist_remap(
+            key, args.scale, max(batch_sizes), args.batches))
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"[stream_churn] wrote {args.out}", flush=True)

@@ -15,7 +15,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .engine import edge_map_pull, edge_map_push, switch_by_density
+from .engine import (edge_map_pull, edge_map_push, out_edge_sum,
+                     switch_by_density)
 
 __all__ = ["bc"]
 
@@ -69,15 +70,14 @@ def bc(ga, root: jnp.ndarray, *, max_iters: int = 0,
     sigma_safe = jnp.maximum(sigma, 1e-30)
 
     def bbody(level, delta):
-        # pull over OUT-edges: group by out_src, gather from out_dst
-        child = ga.out_dst
-        child_ok = dist[child] == dist[ga.out_src] + 1
-        vals = jnp.where(
-            child_ok, (1.0 + delta[child]) / sigma_safe[child], 0.0
-        )
-        summed = jax.ops.segment_sum(
-            vals, ga.out_src, num_segments=v, indices_are_sorted=True
-        )
+        # pull over OUT-edges: group by src, gather from the child endpoint
+        # (dispatches through the backend — segmented storage like
+        # repro.pack folds per hot slot table / cold tile instead)
+        def edge_val(src, child):
+            ok = dist[child] == dist[src] + 1
+            return jnp.where(ok, (1.0 + delta[child]) / sigma_safe[child], 0.0)
+
+        summed = out_edge_sum(ga, edge_val)
         contrib = sigma * summed
         on_level = dist == (levels - 1 - level)
         return jnp.where(on_level, contrib, delta)

@@ -31,22 +31,27 @@ functions and run unchanged on either backend; raw ``GraphArrays`` (the
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Protocol, Tuple, runtime_checkable
+from typing import (Callable, Dict, NamedTuple, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..graph import csr
+from ..kernels.edge_map.edge_map import reduce_identity
 
 __all__ = [
     "GraphArrays",
     "EdgeMapBackend",
     "FlatBackend",
     "EllBackend",
+    "BACKENDS",
+    "resolve_backend",
     "to_arrays",
     "edge_map_pull",
     "edge_map_push",
+    "out_edge_sum",
     "vertex_map",
     "frontier_density",
     "switch_by_density",
@@ -167,8 +172,7 @@ def _push_flat(
     v = ga.in_deg.shape[0]
     shape = (v,) + tuple(prop.shape[1:])
     if init is None:
-        fill = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf, "or": 0}[reduce]
-        init = jnp.full(shape, fill, dtype=vals.dtype)
+        init = jnp.full(shape, reduce_identity(reduce), dtype=vals.dtype)
     if reduce == "sum":
         return init.at[ga.out_dst].add(vals)
     if reduce == "min":
@@ -184,7 +188,14 @@ def _push_flat(
 
 @runtime_checkable
 class EdgeMapBackend(Protocol):
-    """What an edge-map backend must provide for the five apps to run."""
+    """What an edge-map backend must provide for the five apps to run.
+
+    ``pull``/``push`` are the two Ligra primitives.  Backends whose storage
+    is not edge-parallel (``repro.pack``'s `PackedBackend`) additionally
+    implement ``out_edge_sum`` — BC's backward dependency gather — otherwise
+    the dispatching :func:`out_edge_sum` takes the edge-parallel path over
+    the delegate ``out_src``/``out_dst`` arrays.
+    """
 
     def pull(self, prop, *, reduce="sum", src_frontier=None,
              use_weights=False, neutral=0.0): ...
@@ -250,23 +261,25 @@ def _int_identity(dtype, reduce: str) -> float:
             "or": float(info.min)}[reduce]
 
 
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class EllBackend(_Delegate):
-    """Fused Pallas edge maps over per-DBG-group ELL tiles (kernels.edge_map).
+class FusedEdgeMaps:
+    """Shared fused-edge-map implementation family (kernels.edge_map K5).
 
-    One in-direction tile set serves both primitives: pull reduces a row's
-    lanes directly; push seeds the row accumulator with ``init`` and runs the
-    same kernel (a push-with-reduction IS the transposed pull).  The flat
-    arrays stay on board for the operations outside the fused hot path (BC's
-    backward dependency sweep, ``frontier_density``, dist sharding).
+    Everything a backend needs to run the five apps through the fused Pallas
+    kernels, given an in-direction tile set: one tile set serves both
+    primitives — pull reduces a row's lanes directly; push seeds the row
+    accumulator with ``init`` and runs the same kernel (a push-with-reduction
+    IS the transposed pull).  Subclasses provide ``in_tiles``,
+    ``num_vertices`` and the kernel geometry fields; `EllBackend` derives the
+    tiles from a flat CSR, ``repro.pack.PackedBackend`` from the hot/cold
+    packed storage, and ``repro.dist`` stacks the same tile structure
+    per-shard — the three surfaces share THIS implementation instead of
+    reimplementing edge-map semantics.
     """
 
-    ga: GraphArrays
     in_tiles: Tuple  # Tuple[EllTileGroup, ...]
-    row_tile: int = 64
-    width_tile: int = 128
-    interpret: bool = True
+    row_tile: int
+    width_tile: int
+    interpret: bool
 
     def _kernel_kw(self):
         return dict(row_tile=self.row_tile, width_tile=self.width_tile,
@@ -287,7 +300,7 @@ class EllBackend(_Delegate):
             if init is not None:
                 init = init.astype(jnp.float32)
         out = fused_edge_map(
-            self.in_tiles, x, self.ga.num_vertices,
+            self.in_tiles, x, self.num_vertices,
             reduce=red, src_frontier=src_frontier, use_weights=use_weights,
             neutral=neutral, init=init, identity=identity,
             **self._kernel_kw())
@@ -308,11 +321,27 @@ class EllBackend(_Delegate):
         if prop.ndim != 1:
             raise NotImplementedError("fused push is 1-D (no app needs 2-D)")
         if init is None:
-            fill = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf,
-                    "or": 0}[reduce]
-            init = jnp.full((self.ga.num_vertices,), fill, dtype=prop.dtype)
+            init = jnp.full((self.num_vertices,), reduce_identity(reduce),
+                            dtype=prop.dtype)
         return self._map1(prop, reduce=reduce, src_frontier=src_frontier,
                           use_weights=use_weights, neutral=neutral, init=init)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EllBackend(_Delegate, FusedEdgeMaps):
+    """Fused Pallas edge maps over per-DBG-group ELL tiles (kernels.edge_map).
+
+    The flat arrays stay on board for the operations outside the fused hot
+    path (BC's backward dependency sweep, ``frontier_density``, dist
+    sharding).
+    """
+
+    ga: GraphArrays
+    in_tiles: Tuple  # Tuple[EllTileGroup, ...]
+    row_tile: int = 64
+    width_tile: int = 128
+    interpret: bool = True
 
     def tree_flatten(self):
         return ((self.ga, self.in_tiles),
@@ -323,6 +352,62 @@ class EllBackend(_Delegate):
         return cls(children[0], children[1], *aux)
 
 
+# ---------------------------------------------------------------------------
+# Backend registry — THE single table behind every backend-name switch
+# ---------------------------------------------------------------------------
+
+def _build_arrays(g: csr.Graph, **_):
+    return _graph_arrays(g)
+
+
+def _build_flat(g: csr.Graph, **_):
+    return FlatBackend(_graph_arrays(g))
+
+
+def _build_ell(g: csr.Graph, *, row_tile: int = 64, width_tile: int = 128,
+               interpret: bool = True):
+    from ..core.reorder import dbg_spec
+    from ..kernels.edge_map.ops import ell_tiles
+
+    in_deg = g.in_csr.degrees()
+    spec = dbg_spec(max(1.0, float(in_deg.mean()) if in_deg.size else 1.0))
+    tiles = ell_tiles(g.in_csr, spec.boundaries,
+                      row_tile=row_tile, width_tile=width_tile)
+    return EllBackend(_graph_arrays(g), tiles, row_tile=row_tile,
+                      width_tile=width_tile, interpret=interpret)
+
+
+def _build_packed(g: csr.Graph, *, row_tile: int = 64, width_tile: int = 128,
+                  interpret: bool = True):
+    from ..pack.engine import packed_backend
+    from ..pack.layout import pack_graph
+
+    return packed_backend(pack_graph(g), row_tile=row_tile,
+                          width_tile=width_tile, interpret=interpret)
+
+
+#: name -> builder(g, *, row_tile, width_tile, interpret).  ``to_arrays``,
+#: the sharded engine (``repro.dist.graph``) and the benchmarks all resolve
+#: backend names through this one table; extend it rather than matching
+#: strings locally.
+BACKENDS: Dict[str, Callable] = {
+    "flat": _build_flat,      # edge-parallel oracle (gather/segment/scatter)
+    "ell": _build_ell,        # fused Pallas kernels over DBG-ELL tiles
+    "packed": _build_packed,  # fused kernels straight over pack.PackedGraph
+    "arrays": _build_arrays,  # raw GraphArrays (the dist/stream substrate)
+}
+
+
+def resolve_backend(name: str) -> Callable:
+    """Look up a backend builder, with a clear error on unknown names."""
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown edge-map backend {name!r}; known backends: "
+            f"{', '.join(sorted(BACKENDS))}") from None
+
+
 def to_arrays(
     g: csr.Graph,
     *,
@@ -331,29 +416,17 @@ def to_arrays(
     width_tile: int = 128,
     interpret: bool = True,
 ):
-    """Build an edge-map backend for ``g``.
+    """Build an edge-map backend for ``g`` (resolved through ``BACKENDS``).
 
     ``backend="flat"`` (default) keeps the edge-parallel oracle path;
     ``"ell"`` packs the in-direction into per-DBG-group ELL tiles and routes
-    every edge map through the fused Pallas kernels; ``"arrays"`` returns the
-    raw ``GraphArrays`` (the dist/stream substrate).
+    every edge map through the fused Pallas kernels; ``"packed"`` packs ``g``
+    into hot/cold segmented storage (``repro.pack``) and runs the same fused
+    kernels straight over the slot tables; ``"arrays"`` returns the raw
+    ``GraphArrays`` (the dist/stream substrate).
     """
-    ga = _graph_arrays(g)
-    if backend == "arrays":
-        return ga
-    if backend == "flat":
-        return FlatBackend(ga)
-    if backend == "ell":
-        from ..core.reorder import dbg_spec
-        from ..kernels.edge_map.ops import ell_tiles
-
-        in_deg = g.in_csr.degrees()
-        spec = dbg_spec(max(1.0, float(in_deg.mean()) if in_deg.size else 1.0))
-        tiles = ell_tiles(g.in_csr, spec.boundaries,
-                          row_tile=row_tile, width_tile=width_tile)
-        return EllBackend(ga, tiles, row_tile=row_tile,
-                          width_tile=width_tile, interpret=interpret)
-    raise ValueError(backend)
+    return resolve_backend(backend)(
+        g, row_tile=row_tile, width_tile=width_tile, interpret=interpret)
 
 
 def edge_map_pull(ga, prop, **kw):
@@ -379,6 +452,23 @@ def edge_map_push(ga, prop, **kw):
     if isinstance(ga, GraphArrays):
         return _push_flat(ga, prop, **kw)
     return ga.push(prop, **kw)
+
+
+def out_edge_sum(ga, edge_val) -> jnp.ndarray:
+    """src <- SUM over out-edges of ``edge_val(src_ids, dst_ids)``.
+
+    BC's backward dependency gather: a pull in the OUT direction whose edge
+    value depends on both endpoints.  Backends with segmented (non-edge-
+    parallel) storage provide their own ``out_edge_sum``; everything backed
+    by flat arrays takes the edge-parallel segment sum here.
+    """
+    fn = getattr(ga, "out_edge_sum", None)
+    if fn is not None:
+        return fn(edge_val)
+    v = ga.in_deg.shape[0]
+    vals = edge_val(ga.out_src, ga.out_dst)
+    return jax.ops.segment_sum(vals, ga.out_src, num_segments=v,
+                               indices_are_sorted=True)
 
 
 def vertex_map(frontier: jnp.ndarray, fn) -> jnp.ndarray:

@@ -40,15 +40,19 @@ def pagerank_dist(
     mesh=None,
     n_shards: Optional[int] = None,
     policy: str = "replicate_hot",
+    backend: str = "flat",
     damping: float = 0.85,
     max_iters: int = 64,
     tol: float = 1e-7,
 ) -> Tuple[jax.Array, jax.Array, dist_graph.ShardedGraphArrays]:
     """Run sharded PageRank on ``g`` (a ``csr.Graph`` or ``GraphArrays``).
 
-    Returns (ranks, iterations, sharded_graph) — the sharded graph carries the
-    partition/replication stats the scaling benchmark reports.  For repeated
-    runs on the same graph, keep the returned ``sharded_graph`` and call
+    ``backend`` picks the per-shard edge-map implementation (``"flat"`` |
+    ``"ell"``, resolved through ``apps.engine.BACKENDS``); the PageRank loop
+    itself is backend-agnostic.  Returns (ranks, iterations, sharded_graph) —
+    the sharded graph carries the partition/replication stats the scaling
+    benchmark reports.  For repeated runs on the same graph, keep the
+    returned ``sharded_graph`` and call
     :func:`repro.dist.graph.pagerank_sharded` with it directly — the compiled
     executable is cached per (graph, mesh) identity.
     """
@@ -60,7 +64,8 @@ def pagerank_dist(
         ga = to_arrays(g, backend="arrays")
     if mesh is None:
         mesh = make_graph_mesh(n_shards)
-    sg = dist_graph.shard_graph(ga, mesh.devices.size, policy=policy)
+    sg = dist_graph.shard_graph(ga, mesh.devices.size, policy=policy,
+                                backend=backend)
     ranks, iters = dist_graph.pagerank_sharded(
         sg, mesh, damping=damping, max_iters=max_iters, tol=tol)
     return ranks, iters, sg

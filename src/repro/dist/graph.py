@@ -25,11 +25,30 @@ concatenated table ``[local block | hot table | received halo]``.
 
 Push-side communication is the reduction: per-device partial destination
 vectors are combined with ``psum_scatter`` (sum) / ``pmin``/``pmax``.
+
+Two EDGE-MAP BACKENDS implement the per-shard compute, resolved through the
+same ``apps.engine.BACKENDS`` name table as the single-device engine:
+
+* ``"flat"`` — the edge-parallel oracle above (gather → mask → segment
+  reduce / scatter), 3-4 separate O(E_shard) HBM passes per device;
+* ``"ell"`` — each shard's edge segment packed into DBG-ELL tiles
+  (``kernels.edge_map.ops.ell_tiles_sharded``) whose lanes index the SAME
+  concatenated value table, so the whole per-shard edge map is one fused
+  Pallas pass; the collectives are identical.  Push needs no scatter — the
+  per-shard partial is the transposed pull over dst-grouped tiles.
+
+Shard-aware update routing: :func:`apply_remap` consumes a
+``stream.RemapDelta`` and re-homes ONLY the vertices whose degree group
+changed — retargeting their edge slots between the hot table and the halo
+(and patching the affected ELL tile lanes in place) instead of re-sharding
+from a full mapping.  The layout reserves slack for this (``remap_headroom``)
+and raises :class:`RemapOverflow` when the drift exceeds it (the caller then
+does the full re-shard it would have done every time before).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,12 +57,26 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..apps.engine import GraphArrays
+from ..apps import engine as apps_engine
 from ..core import reorder
+from ..kernels.edge_map.edge_map import (edge_map_tile_bytes,
+                                         ell_edge_map_pallas,
+                                         reduce_identity)
+from ..kernels.edge_map.ops import (_scatter_combine, _tile_of,
+                                    ell_tiles_sharded)
 
 __all__ = ["ShardedGraphArrays", "shard_graph", "edge_map_pull_sharded",
-           "edge_map_push_sharded", "pagerank_sharded"]
+           "edge_map_push_sharded", "edge_map_bytes_sharded",
+           "pagerank_sharded", "apply_remap", "RemapOverflow"]
 
 AXIS = "graph"
+
+#: backends the sharded engine implements (a subset of apps.engine.BACKENDS)
+SHARDED_BACKENDS = ("flat", "ell")
+
+
+class RemapOverflow(RuntimeError):
+    """apply_remap ran out of reserved hot/halo slots — re-shard instead."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +95,7 @@ class ShardedGraphArrays:
     in_w: jnp.ndarray          # (D, E_blk) float32
     in_mask: jnp.ndarray       # (D, E_blk) bool — real edge vs pad
     send_idx: jnp.ndarray      # (D, D, halo_max) int32 — owner-local sends
-    hot_ids: jnp.ndarray       # (H,) int32 — replicated vertex ids (global)
+    hot_ids: jnp.ndarray       # (H_cap,) int32 — replicated ids (padded w/ 0)
     # push side (source-sharded out-edges)
     out_src_local: jnp.ndarray  # (D, E_out_blk) int32
     out_dst: jnp.ndarray        # (D, E_out_blk) int32 — global (padded space)
@@ -71,18 +104,41 @@ class ShardedGraphArrays:
     # replicated degree vectors (apps need them)
     in_deg: jnp.ndarray   # (V,) int32
     out_deg: jnp.ndarray  # (V,) int32
+    # engine backend ("flat" | "ell") + per-shard fused tiles when "ell"
+    backend: str = "flat"
+    hot_cap: int = 0          # hot-table slots incl. remap headroom
+    hot_group_count: int = 0  # DBG groups counted as hot at build time
+    weighted: bool = False
+    row_tile: int = 64
+    width_tile: int = 128
+    # Pallas interpret mode for the fused per-shard kernels (True = the
+    # CPU-validated path, same default and meaning as apps.engine.EllBackend)
+    interpret: bool = True
+    pull_tiles: Optional[Tuple] = None  # stacked EllTileGroups (slots → table)
+    push_tiles: Optional[Tuple] = None  # stacked EllTileGroups (dst → local)
     stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # mutable host-side bookkeeping for apply_remap (shared across patched
+    # copies; patching moves it forward, invalidating older snapshots)
+    host: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def v_pad(self) -> int:
         return self.n_shards * self.v_blk
 
+    @property
+    def table_len(self) -> int:
+        """Per-shard gather-table length: [local | hot | halo]."""
+        return self.v_blk + self.hot_cap + self.n_shards * self.halo_max
 
-def _hot_mask(out_deg: np.ndarray, policy: str, num_hot_groups: int) -> np.ndarray:
-    """Vertices in the DBG hot degree-groups (everything at/above avg degree —
-    the groups the paper packs into the fast level)."""
+
+def _hot_mask(out_deg: np.ndarray, policy: str,
+              num_hot_groups: int) -> Tuple[np.ndarray, int]:
+    """(mask, n_hot_groups): vertices in the DBG hot degree-groups
+    (everything at/above avg degree — the groups the paper packs into the
+    fast level), plus how many of the spec's groups that covers."""
     if policy == "partition" or out_deg.size == 0:
-        return np.zeros(out_deg.shape[0], dtype=bool)
+        return np.zeros(out_deg.shape[0], dtype=bool), 0
     if policy != "replicate_hot":
         raise ValueError(policy)
     avg = max(1.0, float(out_deg.mean()))
@@ -93,7 +149,7 @@ def _hot_mask(out_deg: np.ndarray, policy: str, num_hot_groups: int) -> np.ndarr
     # fixed "all but the last 2" offset would miscount)
     a_bound = max(1, int(np.ceil(avg)))
     n_hot = sum(1 for b in spec.boundaries if b >= a_bound)
-    return groups < n_hot
+    return groups < n_hot, n_hot
 
 
 def _pad2d(rows, fill, dtype) -> np.ndarray:
@@ -104,9 +160,35 @@ def _pad2d(rows, fill, dtype) -> np.ndarray:
     return out
 
 
-def shard_graph(ga: GraphArrays, n_shards: int, *, policy: str = "replicate_hot",
-                num_hot_groups: int = 6) -> ShardedGraphArrays:
-    """Partition ``GraphArrays`` for an ``n_shards``-device 1D mesh."""
+def _with_headroom(n: int, frac: float) -> int:
+    return n + int(np.ceil(n * frac)) + 8
+
+
+def shard_graph(ga: GraphArrays, n_shards: int, *,
+                policy: str = "replicate_hot",
+                num_hot_groups: int = 6,
+                backend: str = "flat",
+                row_tile: int = 64,
+                width_tile: int = 128,
+                interpret: bool = True,
+                hot_override: Optional[np.ndarray] = None,
+                remap_headroom: float = 0.25,
+                track_remap: Optional[bool] = None) -> ShardedGraphArrays:
+    """Partition ``GraphArrays`` for an ``n_shards``-device 1D mesh.
+
+    ``backend`` selects the per-shard edge-map implementation (resolved
+    against ``apps.engine.BACKENDS``; the sharded engine implements ``"flat"``
+    and ``"ell"``).  ``hot_override`` replaces the DBG hot mask with an
+    explicit hot-vertex id set (the full-re-shard counterpart of
+    :func:`apply_remap`, and what a live ``stream.IncrementalDBG`` grouping
+    maps to).  ``remap_headroom`` reserves slack hot/halo slots so later
+    ``apply_remap`` calls can re-home group-crossers in place.
+    ``track_remap`` keeps the O(E) host bookkeeping those calls patch
+    (per-shard src index, slot masters, writable tile planes); default: only
+    under ``replicate_hot`` — pass ``False`` for static/benchmark layouts
+    that will never be remapped, dropping the host-memory overhead.
+    """
+    _check_backend(backend)
     v = int(ga.in_deg.shape[0])
     d = int(n_shards)
     v_blk = -(-v // d)
@@ -117,12 +199,20 @@ def shard_graph(ga: GraphArrays, n_shards: int, *, policy: str = "replicate_hot"
     out_dst = np.asarray(ga.out_dst)
     out_w = np.asarray(ga.out_w)
     out_deg = np.asarray(ga.out_deg)
+    weighted = not (ga.in_w is ga.out_w)  # unweighted graphs share ONE plane
 
-    hot = _hot_mask(out_deg, policy, num_hot_groups)
+    hot, hgc = _hot_mask(out_deg, policy, num_hot_groups)
+    if hot_override is not None:
+        if policy != "replicate_hot":
+            raise ValueError("hot_override requires policy='replicate_hot'")
+        hot = np.zeros(v, dtype=bool)
+        hot[np.asarray(hot_override, dtype=np.int64)] = True
     hot_ids = np.nonzero(hot)[0].astype(np.int32)
-    hot_pos = np.full(v, -1, np.int64)
-    hot_pos[hot_ids] = np.arange(hot_ids.shape[0])
     n_hot = int(hot_ids.shape[0])
+    hot_cap = (_with_headroom(n_hot, remap_headroom)
+               if policy == "replicate_hot" else max(1, n_hot))
+    hot_pos = np.full(v, -1, np.int64)
+    hot_pos[hot_ids] = np.arange(n_hot)
 
     owner_of = lambda ids: ids // v_blk
 
@@ -137,15 +227,20 @@ def shard_graph(ga: GraphArrays, n_shards: int, *, policy: str = "replicate_hot"
         remote = srcs[(owner_of(srcs) != i) & (hot_pos[srcs] < 0)]
         uniq = np.unique(remote)
         need.append([uniq[owner_of(uniq) == o] for o in range(d)])
-    halo_max = max(1, max((len(ids) for row in need for ids in row), default=1))
+    halo_used = max(1, max((len(ids) for row in need for ids in row),
+                           default=1))
+    halo_cap = (_with_headroom(halo_used, remap_headroom)
+                if policy == "replicate_hot" else halo_used)
 
     # sender view: send_idx[o, i] = owner-local indices o ships to shard i
-    send_idx = np.zeros((d, d, halo_max), np.int32)
+    send_idx = np.zeros((d, d, halo_cap), np.int32)
+    need_len = np.zeros((d, d), np.int64)
     halo_slots = 0
     for o in range(d):
         for i in range(d):
             ids = need[i][o]
             send_idx[o, i, : len(ids)] = (ids - o * v_blk).astype(np.int32)
+            need_len[i, o] = len(ids)
             halo_slots += len(ids)
 
     # receiver view: edge slots into the [local | hot | halo] value table
@@ -165,7 +260,7 @@ def shard_graph(ga: GraphArrays, n_shards: int, *, policy: str = "replicate_hot"
         for o in range(d):
             m = ro == o
             pos[m] = np.searchsorted(need[i][o], rem[m])
-        slots[is_remote] = v_blk + n_hot + ro * halo_max + pos
+        slots[is_remote] = v_blk + hot_cap + ro * halo_cap + pos
         slot_rows.append(slots)
         dstl_rows.append(in_dst[sl] - i * v_blk)
         w_rows.append(in_w[sl])
@@ -194,31 +289,122 @@ def shard_graph(ga: GraphArrays, n_shards: int, *, policy: str = "replicate_hot"
     for i in range(d):
         out_mask[i, : pbounds[i + 1] - pbounds[i]] = True
 
+    # ---- fused per-shard tiles (backend "ell") ------------------------------
+    if track_remap is None:
+        track_remap = policy == "replicate_hot"
+    pull_tiles = push_tiles = None
+    tile_pos = None
+    table_len = v_blk + hot_cap + d * halo_cap
+    if backend == "ell":
+        pulled = ell_tiles_sharded(
+            [(dstl_rows[i].astype(np.int64), slot_rows[i],
+              w_rows[i] if weighted else None) for i in range(d)],
+            id_upper=table_len, row_tile=row_tile, width_tile=width_tile,
+            with_positions=track_remap)
+        pull_tiles, tile_pos = pulled if track_remap else (pulled, None)
+        push_tiles = ell_tiles_sharded(
+            [(pdst_rows[i].astype(np.int64), srcl_rows[i].astype(np.int64),
+              pw_rows[i] if weighted else None) for i in range(d)],
+            id_upper=v_blk, row_tile=row_tile, width_tile=width_tile)
+
     stats = {
         "policy": policy,
+        "backend": backend,
         "n_hot": n_hot,
         "hot_frac": n_hot / max(1, v),
         "halo_slots": int(halo_slots),
-        "halo_max": int(halo_max),
+        "halo_max": int(halo_cap),
         # bytes one pull moves device-to-device (f32 halo payload, padded)
-        "halo_bytes_padded": int(d * d * halo_max * 4),
+        "halo_bytes_padded": int(d * d * halo_cap * 4),
         "edges_per_shard_max": int(e_blk),
     }
+    hot_ids_pad = np.zeros(hot_cap, np.int32)
+    hot_ids_pad[:n_hot] = hot_ids
+    host = None
+    if track_remap:
+        shard_srcs = [in_src[bounds[i]:bounds[i + 1]] for i in range(d)]
+        # src-sorted edge-position index per shard: apply_remap finds a
+        # mover's edges in O(log E + deg) instead of scanning the segment
+        src_order = []
+        for s in shard_srcs:
+            order = np.argsort(s, kind="stable")
+            src_order.append((s[order], order))
+        host = {
+            "in_src": [np.asarray(s) for s in shard_srcs],
+            "src_order": src_order,
+            "slot": [s.copy() for s in slot_rows],
+            "need0": need,                   # original sorted halo id lists
+            "need_len": need_len,            # used entries per (i, o)
+            "halo_entry": {},                # (i, src) -> appended position
+            "send_idx": send_idx,            # master copy
+            "hot_ids": hot_ids_pad.copy(),
+            "hot_pos": hot_pos,
+            "hot_free": list(range(n_hot, hot_cap)),
+            "tile_pos": tile_pos,
+            "tile_idx": (None if pull_tiles is None
+                         else [np.array(t.idx)            # writable copies
+                               for t in pull_tiles]),
+            "halo_slots": int(halo_slots),
+        }
     return ShardedGraphArrays(
-        n_shards=d, num_vertices=v, v_blk=v_blk, halo_max=halo_max,
+        n_shards=d, num_vertices=v, v_blk=v_blk, halo_max=halo_cap,
         policy=policy,
         in_slot=jnp.asarray(in_slot), in_dst_local=jnp.asarray(in_dst_local),
         in_w=jnp.asarray(in_w_p), in_mask=jnp.asarray(in_mask),
-        send_idx=jnp.asarray(send_idx), hot_ids=jnp.asarray(hot_ids),
+        send_idx=jnp.asarray(send_idx), hot_ids=jnp.asarray(hot_ids_pad),
         out_src_local=jnp.asarray(out_src_local),
         out_dst=jnp.asarray(out_dst_p), out_w=jnp.asarray(out_w_p),
         out_mask=jnp.asarray(out_mask),
         in_deg=jnp.asarray(ga.in_deg), out_deg=jnp.asarray(ga.out_deg),
-        stats=stats,
+        backend=backend, hot_cap=hot_cap, hot_group_count=hgc,
+        weighted=weighted, row_tile=row_tile, width_tile=width_tile,
+        interpret=interpret,
+        pull_tiles=pull_tiles, push_tiles=push_tiles,
+        stats=stats, host=host,
     )
 
 
-_NEUTRAL = {"sum": 0.0, "min": np.inf, "max": -np.inf, "or": 0.0}
+def _check_backend(backend: str) -> str:
+    """Resolve a backend name through the engine's single registry, then
+    narrow to what the sharded engine implements."""
+    apps_engine.resolve_backend(backend)  # clear error on unknown names
+    if backend not in SHARDED_BACKENDS:
+        raise ValueError(
+            f"backend {backend!r} is not supported by the sharded engine; "
+            f"choose one of {'|'.join(SHARDED_BACKENDS)}")
+    return backend
+
+
+def _resolve_backend(sg: ShardedGraphArrays, backend: Optional[str]) -> str:
+    backend = _check_backend(backend or sg.backend)
+    if backend == "ell" and sg.pull_tiles is None:
+        raise ValueError(
+            "sharded ELL backend requires shard_graph(..., backend='ell') "
+            "(per-shard tiles were not packed)")
+    return backend
+
+
+def _flatten_tiles(tiles) -> Tuple[list, list]:
+    """EllTileGroups -> flat arg list + per-group has_w meta (shard_map needs
+    positional array args to split on the leading shard dim)."""
+    args, meta = [], []
+    for t in tiles:
+        args += [t.rows, t.idx, t.deg]
+        if t.w is not None:
+            args.append(t.w)
+        meta.append(t.w is not None)
+    return args, meta
+
+
+def _unflatten_tiles(flat, meta):
+    out, i = [], 0
+    for has_w in meta:
+        rows, idx, deg = flat[i:i + 3]
+        i += 3
+        w = flat[i] if has_w else None
+        i += int(has_w)
+        out.append((rows, idx, deg, w))
+    return out
 
 
 def _pad_prop(sg: ShardedGraphArrays, prop: jnp.ndarray) -> jnp.ndarray:
@@ -227,92 +413,175 @@ def _pad_prop(sg: ShardedGraphArrays, prop: jnp.ndarray) -> jnp.ndarray:
 
 def edge_map_pull_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
                           reduce: str = "sum", use_weights: bool = False,
-                          neutral: Optional[float] = None) -> jnp.ndarray:
+                          neutral: Optional[float] = None,
+                          backend: Optional[str] = None) -> jnp.ndarray:
     """dst <- REDUCE over in-edges of f(prop[src]), sharded over ``mesh``.
 
-    Matches single-device :func:`repro.apps.engine.edge_map_pull` numerics.
+    Matches single-device :func:`repro.apps.engine.edge_map_pull` numerics
+    (min/max bitwise; sum to fp association on the fused backend).
     ``prop``: (V,) global; returns (V,) global.  The only cross-device traffic
-    is the cold-halo all_to_all (+ the small hot-table gather).
+    is the cold-halo all_to_all (+ the small hot-table gather), identical for
+    both backends; ``backend=None`` uses the layout's own.
     """
+    backend = _resolve_backend(sg, backend)
+    red = "max" if reduce == "or" else reduce
     if neutral is None:
-        neutral = _NEUTRAL[reduce]
+        # pad slots and empty rows take the identity of the REWRITTEN
+        # reduction ("or" lowers to max), exactly like the flat engine's
+        # empty segment_max fills — padding can never leak a value
+        neutral = reduce_identity(red)
     v_blk = sg.v_blk
-    prop_blocks = _pad_prop(sg, prop).reshape(sg.n_shards, v_blk)
+    d = sg.n_shards
+    prop_blocks = _pad_prop(sg, prop).reshape(d, v_blk)
     hot_tab = _pad_prop(sg, prop)[sg.hot_ids]  # replicated hot panel
 
-    def ranked(blocks, hot, send_idx, slot, dstl, w, mask):
-        local = blocks[0]
-        halo = local[send_idx[0]]                         # (D, halo_max)
-        if sg.n_shards > 1:
+    def exchange(local, send_idx):
+        halo = local[send_idx[0]]                      # (D, halo_max)
+        if d > 1:
             halo = jax.lax.all_to_all(halo, AXIS, split_axis=0, concat_axis=0)
+        return halo
+
+    if backend == "flat":
+        def ranked(blocks, hot, send_idx, slot, dstl, w, mask):
+            local = blocks[0]
+            halo = exchange(local, send_idx)
+            table = jnp.concatenate([local, hot, halo.reshape(-1)])
+            vals = table[slot[0]]
+            if use_weights:
+                vals = vals + w[0]
+            vals = jnp.where(mask[0], vals, jnp.asarray(neutral, vals.dtype))
+            seg = dict(num_segments=v_blk, indices_are_sorted=True)
+            if reduce == "sum":
+                out = jax.ops.segment_sum(vals, dstl[0], **seg)
+            elif reduce == "min":
+                out = jax.ops.segment_min(vals, dstl[0], **seg)
+            elif reduce in ("max", "or"):
+                out = jax.ops.segment_max(vals, dstl[0], **seg)
+            else:
+                raise ValueError(reduce)
+            return out[None]
+
+        a = P(AXIS)
+        fn = shard_map(ranked, mesh=mesh,
+                       in_specs=(a, P(), a, a, a, a, a), out_specs=a,
+                       check_rep=False)
+        out = fn(prop_blocks, hot_tab, sg.send_idx, sg.in_slot,
+                 sg.in_dst_local, sg.in_w, sg.in_mask)
+        return out.reshape(-1)[: sg.num_vertices]
+
+    # fused per-shard DBG-ELL path: one kernel pass per width class over the
+    # same gather table, then an O(v_blk) combine — no O(E) intermediates
+    identity = reduce_identity(red)
+    tile_args, meta = _flatten_tiles(sg.pull_tiles)
+
+    def ranked_ell(blocks, hot, send_idx, *flat_tiles):
+        local = blocks[0]
+        halo = exchange(local, send_idx)
         table = jnp.concatenate([local, hot, halo.reshape(-1)])
-        vals = table[slot[0]]
-        if use_weights:
-            vals = vals + w[0]
-        vals = jnp.where(mask[0], vals, jnp.asarray(neutral, vals.dtype))
-        seg = dict(num_segments=v_blk, indices_are_sorted=True)
-        if reduce == "sum":
-            out = jax.ops.segment_sum(vals, dstl[0], **seg)
-        elif reduce == "min":
-            out = jax.ops.segment_min(vals, dstl[0], **seg)
-        elif reduce in ("max", "or"):
-            out = jax.ops.segment_max(vals, dstl[0], **seg)
-        else:
-            raise ValueError(reduce)
+        out = jnp.full((v_blk,), identity, table.dtype)
+        for rows, idx, deg, w in _unflatten_tiles(flat_tiles, meta):
+            r_pad, w_pad = idx.shape[1], idx.shape[2]
+            y = ell_edge_map_pallas(
+                table, idx[0], deg[0], reduce=red,
+                w=w[0] if (use_weights and w is not None) else None,
+                unit_weights=use_weights,
+                neutral=neutral, identity=identity,
+                row_tile=_tile_of(r_pad, sg.row_tile),
+                width_tile=_tile_of(w_pad, sg.width_tile),
+                interpret=sg.interpret)
+            out = _scatter_combine(out, rows[0], y, red)
         return out[None]
 
     a = P(AXIS)
-    fn = shard_map(ranked, mesh=mesh,
-                   in_specs=(a, P(), a, a, a, a, a), out_specs=a,
+    fn = shard_map(ranked_ell, mesh=mesh,
+                   in_specs=(a, P(), a) + (a,) * len(tile_args), out_specs=a,
                    check_rep=False)
-    out = fn(prop_blocks, hot_tab, sg.send_idx, sg.in_slot, sg.in_dst_local,
-             sg.in_w, sg.in_mask)
+    out = fn(prop_blocks, hot_tab, sg.send_idx, *tile_args)
     return out.reshape(-1)[: sg.num_vertices]
 
 
 def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
                           reduce: str = "sum", use_weights: bool = False,
-                          init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                          init: Optional[jnp.ndarray] = None,
+                          backend: Optional[str] = None) -> jnp.ndarray:
     """dst <- REDUCE over pushes from sources, sharded over ``mesh``.
 
     Sources read their owner-local property block (no input communication);
     the cross-device reduction of partial destination vectors is the
-    collective (``psum_scatter`` for sum, ``pmin``/``pmax`` otherwise).
+    collective (``psum_scatter`` for sum, ``pmin``/``pmax`` otherwise).  On
+    the ``"ell"`` backend the per-shard partial is computed as the transposed
+    pull over dst-grouped tiles — no scatter at all before the collective.
     """
+    backend = _resolve_backend(sg, backend)
     v_blk = sg.v_blk
     v_pad = sg.v_pad
-    prop_blocks = _pad_prop(sg, prop).reshape(sg.n_shards, v_blk)
-    fill = _NEUTRAL[reduce]
+    d = sg.n_shards
+    prop_blocks = _pad_prop(sg, prop).reshape(d, v_blk)
+    fill = reduce_identity(reduce)  # untouched rows match the 1-device init
 
-    def ranked(blocks, srcl, dst, w, mask):
-        local = blocks[0]
-        vals = local[srcl[0]]
-        if use_weights:
-            vals = vals + w[0]
-        vals = jnp.where(mask[0], vals, jnp.asarray(fill, vals.dtype))
-        partial = jnp.full((v_pad,), fill, vals.dtype)
+    def collect(partial):
+        """Combine per-shard (v_pad,) partials into each shard's own block."""
         if reduce == "sum":
-            partial = partial.at[dst[0]].add(vals)
-            if sg.n_shards > 1:
-                mine = jax.lax.psum_scatter(partial, AXIS,
+            if d > 1:
+                return jax.lax.psum_scatter(partial, AXIS,
                                             scatter_dimension=0, tiled=True)
-            else:
-                mine = partial
-        else:
-            upd = (partial.at[dst[0]].min if reduce == "min"
-                   else partial.at[dst[0]].max)
-            partial = upd(vals)
-            if sg.n_shards > 1:
-                partial = (jax.lax.pmin if reduce == "min"
-                           else jax.lax.pmax)(partial, AXIS)
-            i = jax.lax.axis_index(AXIS)
-            mine = jax.lax.dynamic_slice_in_dim(partial, i * v_blk, v_blk)
-        return mine[None]
+            return partial
+        if d > 1:
+            partial = (jax.lax.pmin if reduce == "min"
+                       else jax.lax.pmax)(partial, AXIS)
+        i = jax.lax.axis_index(AXIS)
+        return jax.lax.dynamic_slice_in_dim(partial, i * v_blk, v_blk)
 
-    a = P(AXIS)
-    fn = shard_map(ranked, mesh=mesh, in_specs=(a, a, a, a, a), out_specs=a,
-                   check_rep=False)
-    out = fn(prop_blocks, sg.out_src_local, sg.out_dst, sg.out_w, sg.out_mask)
+    if backend == "flat":
+        def ranked(blocks, srcl, dst, w, mask):
+            local = blocks[0]
+            vals = local[srcl[0]]
+            if use_weights:
+                vals = vals + w[0]
+            vals = jnp.where(mask[0], vals, jnp.asarray(fill, vals.dtype))
+            partial = jnp.full((v_pad,), fill, vals.dtype)
+            if reduce == "sum":
+                partial = partial.at[dst[0]].add(vals)
+            elif reduce == "min":
+                partial = partial.at[dst[0]].min(vals)
+            elif reduce in ("max", "or"):
+                partial = partial.at[dst[0]].max(vals)
+            else:
+                raise ValueError(reduce)
+            return collect(partial)[None]
+
+        a = P(AXIS)
+        fn = shard_map(ranked, mesh=mesh, in_specs=(a, a, a, a, a),
+                       out_specs=a, check_rep=False)
+        out = fn(prop_blocks, sg.out_src_local, sg.out_dst, sg.out_w,
+                 sg.out_mask)
+    else:
+        red = "max" if reduce == "or" else reduce
+        identity = reduce_identity(red)  # masked lanes can never win a max
+        tile_args, meta = _flatten_tiles(sg.push_tiles)
+
+        def ranked_ell(blocks, *flat_tiles):
+            local = blocks[0]
+            partial = jnp.full((v_pad,), fill, local.dtype)
+            for rows, idx, deg, w in _unflatten_tiles(flat_tiles, meta):
+                r_pad, w_pad = idx.shape[1], idx.shape[2]
+                y = ell_edge_map_pallas(
+                    local, idx[0], deg[0], reduce=red,
+                    w=w[0] if (use_weights and w is not None) else None,
+                    unit_weights=use_weights,
+                    neutral=fill, identity=identity,
+                    row_tile=_tile_of(r_pad, sg.row_tile),
+                    width_tile=_tile_of(w_pad, sg.width_tile),
+                    interpret=sg.interpret)
+                partial = _scatter_combine(partial, rows[0], y, red)
+            return collect(partial)[None]
+
+        a = P(AXIS)
+        fn = shard_map(ranked_ell, mesh=mesh,
+                       in_specs=(a,) + (a,) * len(tile_args), out_specs=a,
+                       check_rep=False)
+        out = fn(prop_blocks, *tile_args)
+
     out = out.reshape(-1)[: sg.num_vertices]
     if init is not None:
         if reduce == "sum":
@@ -322,6 +591,214 @@ def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
         else:
             out = jnp.maximum(init, out)
     return out.astype(prop.dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-iteration HBM byte model (the BENCH_dist fused-vs-flat column)
+# ---------------------------------------------------------------------------
+
+def edge_map_bytes_sharded(sg: ShardedGraphArrays, *, mode: str = "pull",
+                           use_weights: bool = False,
+                           backend: Optional[str] = None) -> int:
+    """Analytic single-pass HBM bytes of one sharded edge map, PER SHARD.
+
+    Mirrors ``benchmarks.edge_map_perf._flat_model_bytes`` for the flat path
+    (idx read + table gather + edge-value materialize, then the segment /
+    scatter pass re-reads values + owner ids and writes the block) and the
+    kernels' ``pl.CostEstimate`` accounting for the fused path (tile planes +
+    gather-table residency, one pass, no O(E) intermediates).  The halo
+    all_to_all payload is identical on both backends and excluded.
+    """
+    backend = _resolve_backend(sg, backend)
+    e = int(sg.in_slot.shape[1] if mode == "pull" else sg.out_dst.shape[1])
+    table = sg.table_len if mode == "pull" else sg.v_blk
+    out_len = sg.v_blk if mode == "pull" else sg.v_pad
+    if backend == "flat":
+        b = e * 4 + e * 4 + e * 4      # slot ids, table gather, vals write
+        if use_weights:
+            b += e * 4 + 2 * e * 4     # w plane read + vals rmw
+        b += e * 1 + 2 * e * 4         # pad mask + vals rmw
+        b += e * 4 + e * 4 + out_len * 4  # reduce/scatter pass + out write
+        b += table * 4                 # gather-table materialize
+        return b
+    tiles = sg.pull_tiles if mode == "pull" else sg.push_tiles
+    total = out_len * 4                # combine write
+    for t in tiles:
+        r_pad, w_pad = int(t.idx.shape[1]), int(t.idx.shape[2])
+        total += edge_map_tile_bytes(
+            r_pad, w_pad, table,
+            weighted=use_weights and t.w is not None,
+            frontier=False, alive=False, init=False,
+            idx_itemsize=t.idx.dtype.itemsize)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# shard-aware update routing (stream.RemapDelta -> patched layout)
+# ---------------------------------------------------------------------------
+
+def apply_remap(sg: ShardedGraphArrays, delta) -> ShardedGraphArrays:
+    """Re-home ONLY the vertices whose degree group changed.
+
+    ``delta`` is a ``stream.RemapDelta`` (or anything with ``moved`` /
+    ``new_group`` arrays; merge several with ``RemapDelta.merge`` first).  A
+    vertex whose new group is hot (``new_group < sg.hot_group_count``) moves
+    into the replicated hot table; one that left the hot groups moves back to
+    owner-local / halo slots.  Only the edge slots (and, on the ``"ell"``
+    backend, the individual tile lanes) referencing the movers are patched —
+    the rest of the layout, including every untouched shard row, is reused
+    as-is.  Raises :class:`RemapOverflow` when the reserved hot/halo headroom
+    is exhausted; the caller should then fall back to a full
+    :func:`shard_graph` (which is what this routine replaces in the common,
+    small-drift case).
+
+    The returned layout SHARES host bookkeeping with ``sg`` (patching moves
+    it forward); treat the input as consumed.
+    """
+    if sg.policy != "replicate_hot":
+        return sg  # grouping does not affect a pure partition layout
+    host = sg.host
+    if host is None:
+        raise ValueError("layout carries no remap bookkeeping "
+                         "(shard_graph(..., track_remap=True))")
+    if getattr(delta, "spec_rebuilt", False):
+        # the regrouper re-derived its boundary spec: the delta's group ids
+        # are numbered under the NEW spec while hot_group_count was counted
+        # under the layout's build-time spec — comparing them would mis-home
+        # vertices.  Force the full re-shard the caller already handles.
+        raise RemapOverflow(
+            "grouping spec was rebuilt (boundary drift) — group ids are not "
+            "comparable to this layout's hot_group_count; re-shard with "
+            "hot_override=<live hot set>")
+    moved = np.asarray(delta.moved, dtype=np.int64).ravel()
+    new_group = np.asarray(delta.new_group, dtype=np.int64).ravel()
+    if moved.size == 0:
+        return sg
+    hot_pos = host["hot_pos"]
+    wants_hot = new_group < sg.hot_group_count
+    newly_hot = moved[wants_hot & (hot_pos[moved] < 0)]
+    newly_cold = moved[~wants_hot & (hot_pos[moved] >= 0)]
+    if newly_hot.size == 0 and newly_cold.size == 0:
+        return sg
+
+    d, v_blk, v = sg.n_shards, sg.v_blk, sg.num_vertices
+    hot_cap, halo_cap = sg.hot_cap, sg.halo_max
+    free = host["hot_free"]
+    if newly_hot.size > len(free):
+        raise RemapOverflow(
+            f"{newly_hot.size} vertices turned hot but only {len(free)} "
+            f"reserved hot slots remain (cap {hot_cap})")
+
+    # allocate hot slots; release the cold movers' slots afterwards so one
+    # delta cannot hand a slot to two owners mid-patch
+    hot_slot_of = np.full(v, -1, np.int64)
+    for vid in newly_hot.tolist():
+        p = free.pop()
+        hot_slot_of[vid] = p
+        hot_pos[vid] = p
+        host["hot_ids"][p] = vid
+
+    need_len = host["need_len"]
+    halo_entry = host["halo_entry"]
+    send_master = host["send_idx"]
+
+    def halo_slot(i: int, src: int) -> int:
+        """Table slot of remote cold ``src`` on shard ``i`` (stable)."""
+        o = src // v_blk
+        base = sg.v_blk + hot_cap + o * halo_cap
+        lst = host["need0"][i][o]
+        p = np.searchsorted(lst, src)
+        if p < len(lst) and lst[p] == src:
+            return base + int(p)
+        key = (i, src)
+        p = halo_entry.get(key)
+        if p is None:
+            p = int(need_len[i, o])
+            if p >= halo_cap:
+                raise RemapOverflow(
+                    f"halo capacity {halo_cap} exhausted for shard pair "
+                    f"({o}->{i})")
+            need_len[i, o] = p + 1
+            send_master[o, i, p] = src - o * v_blk
+            halo_entry[key] = p
+            host["halo_slots"] += 1
+        return base + p
+
+    dirty_shards: List[int] = []
+    dirty_rows: List[np.ndarray] = []
+    dirty_tiles: Dict[int, set] = {}
+    e_blk = int(sg.in_slot.shape[1])
+    movers = np.concatenate([newly_hot, newly_cold])
+    for i in range(d):
+        srcs = host["in_src"][i]
+        srcs_sorted, order = host["src_order"][i]
+        lo = np.searchsorted(srcs_sorted, movers, "left")
+        hi = np.searchsorted(srcs_sorted, movers, "right")
+        if not np.any(hi > lo):
+            continue
+        touched = np.concatenate(
+            [order[a:b] for a, b in zip(lo, hi) if b > a])
+        if touched.size == 0:
+            continue
+        # vectorized retarget: per-edge work is pure numpy; only NEW halo
+        # entries (one per unique (shard, src) pair) allocate sequentially
+        slots = host["slot"][i]
+        src_t = srcs[touched]
+        new_slots = np.empty(touched.shape[0], np.int64)
+        m_hot = hot_slot_of[src_t] >= 0
+        new_slots[m_hot] = v_blk + hot_slot_of[src_t[m_hot]]
+        m_local = ~m_hot & (src_t // v_blk == i)
+        new_slots[m_local] = src_t[m_local] - i * v_blk
+        m_halo = ~m_hot & ~m_local
+        if m_halo.any():
+            u, inv = np.unique(src_t[m_halo], return_inverse=True)
+            u_slots = np.array([halo_slot(i, int(s)) for s in u], np.int64)
+            new_slots[m_halo] = u_slots[inv]
+        slots[touched] = new_slots
+        if host["tile_pos"] is not None:
+            pos = host["tile_pos"][i][touched]
+            for c in np.unique(pos[:, 0]):
+                m = pos[:, 0] == c
+                host["tile_idx"][c][i, pos[m, 1], pos[m, 2]] = new_slots[m]
+                dirty_tiles.setdefault(int(c), set()).add(i)
+        row = np.zeros(e_blk, np.int32)
+        row[: slots.shape[0]] = slots
+        dirty_shards.append(i)
+        dirty_rows.append(row)
+
+    # release the hot slots the cold movers held (ids stay in the table —
+    # nothing references them, and the gather just reads a stale value)
+    for vid in newly_cold.tolist():
+        free.append(int(hot_pos[vid]))
+        hot_pos[vid] = -1
+
+    in_slot = sg.in_slot
+    if dirty_shards:
+        in_slot = in_slot.at[jnp.asarray(dirty_shards)].set(
+            jnp.asarray(np.stack(dirty_rows)))
+    pull_tiles = sg.pull_tiles
+    if pull_tiles is not None and dirty_tiles:
+        new_tiles = list(pull_tiles)
+        for c, shards in dirty_tiles.items():
+            idx = new_tiles[c].idx
+            rows = sorted(shards)
+            idx = idx.at[jnp.asarray(rows)].set(
+                jnp.asarray(host["tile_idx"][c][rows]))
+            new_tiles[c] = new_tiles[c]._replace(idx=idx)
+        pull_tiles = tuple(new_tiles)
+
+    stats = dict(sg.stats)
+    stats["halo_slots"] = int(host["halo_slots"])
+    stats["n_hot"] = int(np.sum(hot_pos >= 0))
+    stats["hot_frac"] = stats["n_hot"] / max(1, v)
+    return dataclasses.replace(
+        sg,
+        in_slot=in_slot,
+        send_idx=jnp.asarray(send_master),
+        hot_ids=jnp.asarray(host["hot_ids"]),
+        pull_tiles=pull_tiles,
+        stats=stats,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -336,12 +813,14 @@ def pagerank_sharded(sg: ShardedGraphArrays, mesh, *, damping: float = 0.85,
                      max_iters: int = 64, tol: float = 1e-7):
     """Sharded PageRank matching :func:`repro.apps.pagerank.pagerank`.
 
-    Compiles once per (graph, mesh, hyperparams) — repeat calls (benchmark
-    iterations) reuse the cached executable.  The cache is identity-keyed and
-    bounded: oldest entries (which pin their graph's device arrays) are
-    evicted past ``_PR_CACHE_MAX`` distinct configurations.
+    Runs on whichever edge-map backend ``sg`` was built with — the loop body
+    is backend-agnostic.  Compiles once per (graph, mesh, hyperparams) —
+    repeat calls (benchmark iterations) reuse the cached executable.  The
+    cache is identity-keyed and bounded: oldest entries (which pin their
+    graph's device arrays) are evicted past ``_PR_CACHE_MAX`` distinct
+    configurations.
     """
-    key = (id(sg), id(mesh), sg.policy, damping, max_iters, tol)
+    key = (id(sg), id(mesh), sg.policy, sg.backend, damping, max_iters, tol)
     if key not in _PR_CACHE:
         while len(_PR_CACHE) >= _PR_CACHE_MAX:
             _PR_CACHE.pop(next(iter(_PR_CACHE)))

@@ -1,4 +1,5 @@
-from .edge_map import REDUCE_IDENTITY, ell_edge_map_pallas  # noqa: F401
-from .ops import (EllTileGroup, coo_tiles, ell_tiles, fused_edge_map,  # noqa: F401
-                  fused_edge_map_bytes)
+from .edge_map import (REDUCE_IDENTITY, ell_edge_map_pallas,  # noqa: F401
+                       reduce_identity)
+from .ops import (EllTileGroup, coo_tiles, ell_tiles,  # noqa: F401
+                  ell_tiles_sharded, fused_edge_map, fused_edge_map_bytes)
 from .ref import ell_edge_map_ref  # noqa: F401

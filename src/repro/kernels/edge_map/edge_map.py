@@ -41,9 +41,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["REDUCE_IDENTITY", "ell_edge_map_pallas"]
+__all__ = ["REDUCE_IDENTITY", "reduce_identity", "ell_edge_map_pallas"]
 
 REDUCE_IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def reduce_identity(reduce: str) -> float:
+    """Identity element of an engine reduction — THE canonical table.
+
+    Every layer that pads (ELL lanes, halo slots, delta buffers) must fill
+    with this exact value so padding can never leak into a combiner: engine
+    fills, the sharded pmin/pmax partials, stream tombstone masking and the
+    packed slot tables all resolve through here.  ``"or"`` is the engine's
+    max over {0,1} reachability lanes; its identity is 0 (no bit set).
+    """
+    if reduce == "or":
+        return 0.0
+    return REDUCE_IDENTITY[reduce]
 
 
 def _make_kernel(reduce: str, has_w: bool, unit_weights: bool,

@@ -26,6 +26,7 @@ from .edge_map import REDUCE_IDENTITY, edge_map_tile_bytes, ell_edge_map_pallas
 __all__ = [
     "EllTileGroup",
     "ell_tiles",
+    "ell_tiles_sharded",
     "coo_tiles",
     "refresh_alive",
     "fused_edge_map",
@@ -164,13 +165,16 @@ def ell_tiles(
     # fine 8/16-lane widths).
     by_width = {}
     for k in range(len(boundaries)):
-        rows = np.where(grp == k)[0]
+        # zero-degree rows really are skipped (they take the reduction
+        # identity in the combine) — essential when the CSR covers only a
+        # row SUBSET (repro.pack's cold segment): a deg-0 row here may be
+        # owned by another tile set, and a set-combine row must not clobber
+        # it with the identity.
+        rows = np.where((grp == k) & (deg_all > 0))[0]
         if rows.size == 0:
             continue
         degs = deg_all[rows].astype(np.int64)
         wmax = int(degs.max())
-        if wmax == 0:
-            continue
         w_pad = _pad_dim(wmax, width_tile)
         by_width.setdefault(w_pad, []).append((rows, degs))
     out = []
@@ -190,6 +194,104 @@ def ell_tiles(
             alive=None if alive is None else jnp.asarray(alive),
         ))
     return tuple(out)
+
+
+def ell_tiles_sharded(
+    shard_edges: Sequence[Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]],
+    *,
+    id_upper: int,
+    boundaries: Optional[Sequence[int]] = None,
+    row_tile: int = 64,
+    width_tile: int = 128,
+    with_positions: bool = False,
+):
+    """Pack D per-shard edge lists into ELL groups that STACK across shards.
+
+    ``shard_edges[i] = (rows, cols, w|None)`` is shard *i*'s edge list in host
+    numpy (rows = owning row ids in that shard's private row space, cols =
+    gather indices < ``id_upper``).  The returned groups carry a leading shard
+    dim on every plane — ``rows (D, R_pad)``, ``idx (D, R_pad, W_pad)``,
+    ``deg (D, R_pad)``, optional ``w`` — because ``shard_map`` needs one
+    static tile geometry per device: rows are binned by their (shard-local)
+    degree into the shared geometric ``boundaries``, each bin's padded width
+    is taken from its max over ALL shards, same-width bins merge into one
+    class (the ``ell_tiles`` idiom), and each class's row dim pads to the max
+    shard population.  Padding rows have ``deg == 0`` and ``rows == 0``, so a
+    scatter-combine into an identity-initialized accumulator ignores them.
+
+    ``with_positions=True`` additionally returns, per shard, an ``(E_i, 3)``
+    int32 array mapping each input edge (input order) to its ``(class, row,
+    col)`` tile slot — the patch index ``repro.dist.graph.apply_remap`` uses
+    to retarget individual lanes without repacking.
+    """
+    from ...core.reorder import _assign_groups, dbg_spec
+
+    d = len(shard_edges)
+    per = []  # (urows, degs, starts, cols_sorted, w_sorted, order)
+    for rows, cols, w in shard_edges:
+        order = np.argsort(rows, kind="stable")
+        urows, degs = np.unique(rows[order], return_counts=True)
+        starts = np.concatenate([[0], np.cumsum(degs)])
+        per.append((urows, degs.astype(np.int64), starts, cols[order],
+                    None if w is None else w[order], order))
+    pooled = (np.concatenate([p[1] for p in per])
+              if any(p[1].size for p in per) else np.zeros(0, np.int64))
+    if boundaries is None:
+        mean = max(1.0, float(pooled.mean()) if pooled.size else 1.0)
+        boundaries = dbg_spec(mean).boundaries
+    nb = len(boundaries)
+    shard_bins = [_assign_groups(p[1], boundaries) for p in per]
+    bin_wmax = np.zeros(nb, np.int64)
+    for (_, degs, *_), grp in zip(per, shard_bins):
+        if degs.size:
+            np.maximum.at(bin_wmax, grp, degs)
+    by_width: dict = {}  # w_pad -> [bin ids], hottest bin first
+    for k in range(nb):
+        if bin_wmax[k] == 0:
+            continue
+        by_width.setdefault(_pad_dim(int(bin_wmax[k]), width_tile),
+                            []).append(k)
+
+    weighted = any(p[4] is not None for p in per)
+    id_dtype = _id_dtype(id_upper)
+    groups = []
+    positions = [np.full((rows.shape[0], 3), -1, np.int32)
+                 for rows, _, _ in shard_edges]
+    for ci, (w_pad, bins) in enumerate(by_width.items()):
+        sels = [np.concatenate([np.flatnonzero(g == k) for k in bins])
+                if g.size else np.zeros(0, np.int64)
+                for g in shard_bins]
+        r_pad = _pad_dim(max(int(s.size) for s in sels), row_tile)
+        idx = np.zeros((d, r_pad, w_pad), id_dtype)
+        deg = np.zeros((d, r_pad), np.int32)
+        rws = np.zeros((d, r_pad), np.int32)
+        wgt = np.zeros((d, r_pad, w_pad), np.float32) if weighted else None
+        for i, ((urows, degs, starts, cs, ws, order), sel) in enumerate(
+                zip(per, sels)):
+            if sel.size == 0:
+                continue
+            rdeg = degs[sel]
+            row_rep, col = _slot_coords(rdeg)
+            pos = csr_mod.ragged_offsets(starts[sel], rdeg)
+            idx[i][row_rep, col] = cs[pos].astype(id_dtype)
+            if wgt is not None and ws is not None:
+                wgt[i][row_rep, col] = ws[pos]
+            deg[i, : sel.size] = rdeg
+            rws[i, : sel.size] = urows[sel].astype(np.int32)
+            if with_positions:
+                # sorted-edge position p holds input edge order[p]
+                inp = order[pos]
+                positions[i][inp, 0] = ci
+                positions[i][inp, 1] = row_rep
+                positions[i][inp, 2] = col
+        groups.append(EllTileGroup(
+            rows=jnp.asarray(rws), idx=jnp.asarray(idx),
+            deg=jnp.asarray(deg),
+            w=None if wgt is None else jnp.asarray(wgt)))
+    tiles = tuple(groups)
+    if with_positions:
+        return tiles, positions
+    return tiles
 
 
 def coo_tiles(

@@ -4,19 +4,14 @@ The storage layer under the paper's cache argument: a DBG-grouped graph is
 packed into a fixed-stride **hot segment** (the paper's packing of high-reuse
 vertices made physical) and a delta + group-varint compressed **cold tail**
 (the ordering↔compressibility coupling of Floros et al.), and the Ligra apps
-run over it without round-tripping through flat CSR.
+run over it without round-tripping through flat CSR: ``packed_backend`` (or
+``apps.to_arrays(g, backend="packed")``) plugs the packed layout into the
+``apps.engine`` fused edge-map family, so ``apps.pagerank`` / ``apps.sssp``
+/ … execute straight over the slot tables.
 """
 from . import codec, engine, layout  # noqa: F401
 from .codec import GroupVarintLists, decode_all, decode_block, encode_values  # noqa: F401
-from .engine import (  # noqa: F401
-    PackedArrays,
-    bc_packed,
-    edge_map_pull_packed,
-    edge_map_push_packed,
-    packed_arrays,
-    pagerank_packed,
-    sssp_packed,
-)
+from .engine import PackedBackend, packed_backend  # noqa: F401
 from .layout import (  # noqa: F401
     ColdSegment,
     HotGroup,

@@ -1,45 +1,47 @@
-"""Run the Ligra-style apps directly over a ``PackedGraph``.
+"""``PackedBackend`` — run the apps straight over a ``PackedGraph``.
 
-The adapter mirrors ``apps.engine``'s two primitives over the packed layout:
-the **hot segment** is traversed in place (fixed-stride slot tables, regular
-gathers — never expanded to edge lists), and the **cold segment** is decoded
-once into a per-direction tile cache at ``packed_arrays`` time (the decoded-
-tile path; the compressed bytes stay the storage of record).
+Since PR 5 the packed storage is an ``apps.engine`` edge-map backend rather
+than a parallel engine: the **hot segment**'s fixed-stride slot tables ARE
+ELL tiles (rows × stride planes with a true-degree mask — exactly the
+geometry ``kernels.edge_map`` consumes), so they feed the fused Pallas
+kernels directly, still packed, minimal-width ids and all; the **cold
+segment** decodes once into per-degree-group ELL tiles (the decoded-tile
+path — the compressed varint bytes stay the storage of record).  One
+in-direction tile set serves both primitives (push is the transposed pull
+with an ``init``-seeded accumulator), so PR/PRΔ/SSSP/BC/Radii run through
+``apps.pagerank`` / ``apps.sssp`` / … unchanged — no packed reimplementation
+of any app remains.
 
-Bit-identity contract (tested): PR, SSSP and BC over ``PackedArrays`` return
-bit-identical results to the flat engine running on ``pg.unpack()``.  The
-mechanism: every per-destination reduction uses the same segmented fold over
-the same canonical (ascending) per-row neighbor order — hot padding slots
-contribute the reduction's exact identity element, and ``x + 0.0`` / ``min(x,
-inf)`` / ``max(x, -inf)`` preserve bits — so each row's fold is the same
-expression the flat ``segment_sum`` evaluates.  Push-mode ``sum`` is the one
-exception (per-destination fold order differs across segments); min/max
-pushes (SSSP's relaxation) are exactly associative and stay bit-identical.
+Parity contract (tested): min/max reductions (SSSP's relaxation, the BFS
+levels inside BC/Radii) are BIT-identical to ``FlatBackend`` on
+``pg.unpack()`` — padding slots contribute the reduction's exact identity
+element and min/max are exactly associative.  Sum reductions agree to fp
+association (~1e-6 relative), the same contract as ``EllBackend``.
+
+BC's backward dependency sweep dispatches through
+``apps.engine.out_edge_sum``: here it folds per hot slot table / cold tile
+of the OUT direction (a segmented sum in packed traversal order) instead of
+materializing an edge-parallel out-edge list.
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..apps.engine import FusedEdgeMaps
+from ..kernels.edge_map.ops import EllTileGroup, _pad_dim, ell_tiles
 from .layout import PackedAdjacency, PackedGraph
 
 __all__ = [
     "HotDev",
     "ColdDev",
-    "PackedArrays",
-    "packed_arrays",
-    "edge_map_pull_packed",
-    "edge_map_push_packed",
-    "pagerank_packed",
-    "sssp_packed",
-    "bc_packed",
+    "PackedBackend",
+    "packed_backend",
 ]
-
-_NEUTRAL = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf, "or": 0.0}
 
 
 class HotDev(NamedTuple):
@@ -59,19 +61,6 @@ class ColdDev(NamedTuple):
     seg: jnp.ndarray  # (E,) int32 local row index per edge (ascending)
     neigh: jnp.ndarray  # (E,) int32 neighbor ids
     w: Optional[jnp.ndarray]  # (E,) f32 or None
-
-
-class PackedArrays(NamedTuple):
-    in_hot: Tuple[HotDev, ...]
-    in_cold: ColdDev
-    out_hot: Tuple[HotDev, ...]
-    out_cold: ColdDev
-    in_deg: jnp.ndarray  # (V,) int32
-    out_deg: jnp.ndarray  # (V,) int32
-
-    @property
-    def num_vertices(self) -> int:
-        return int(self.in_deg.shape[0])
 
 
 def _hot_dev(adj: PackedAdjacency) -> Tuple[HotDev, ...]:
@@ -101,268 +90,108 @@ def _cold_dev(adj: PackedAdjacency) -> ColdDev:
         w=None if adj.cold.w is None else jnp.asarray(adj.cold.w))
 
 
-def packed_arrays(pg: PackedGraph) -> PackedArrays:
-    """Materialize device views: hot tables stay packed, cold tiles decode
-    once here (and only here)."""
-    return PackedArrays(
-        in_hot=_hot_dev(pg.in_adj),
-        in_cold=_cold_dev(pg.in_adj),
+def _hot_tiles(adj: PackedAdjacency, row_tile: int,
+               width_tile: int) -> Tuple[EllTileGroup, ...]:
+    """Wrap the hot slot tables as fused-kernel tiles WITHOUT re-packing.
+
+    A slot table is already an ELL plane: rows padded to the group stride,
+    minimal-width ids, per-row true degree.  Only the tile-granularity zero
+    padding is added here; the id plane keeps the storage dtype (uint16 on
+    every benchmark graph — half the idx bytes of an int32 plane).
+    """
+    tiles = []
+    for h in adj.hot:
+        if h.num_rows == 0 or h.stride == 0:
+            continue
+        r, s = h.num_rows, h.stride
+        r_pad = _pad_dim(r, row_tile)
+        w_pad = _pad_dim(s, width_tile)
+        idx = np.zeros((r_pad, w_pad), h.idx.dtype)
+        idx[:r, :s] = h.idx
+        deg = np.zeros(r_pad, np.int32)
+        deg[:r] = h.deg
+        w = None
+        if h.w is not None:
+            w = np.zeros((r_pad, w_pad), np.float32)
+            w[:r, :s] = h.w
+        tiles.append(EllTileGroup(
+            rows=jnp.asarray(h.rows.astype(np.int32)),
+            idx=jnp.asarray(idx),
+            deg=jnp.asarray(deg),
+            w=None if w is None else jnp.asarray(w)))
+    return tuple(tiles)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedBackend(FusedEdgeMaps):
+    """``apps.engine`` backend over hot/cold packed storage (see module doc)."""
+
+    in_tiles: Tuple  # hot slot tables + decoded cold tiles, pull direction
+    out_hot: Tuple[HotDev, ...]
+    out_cold: ColdDev
+    in_deg: jnp.ndarray  # (V,) int32
+    out_deg: jnp.ndarray  # (V,) int32
+    row_tile: int = 64
+    width_tile: int = 128
+    interpret: bool = True
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.in_deg.shape[0])
+
+    def out_edge_sum(self, edge_val) -> jnp.ndarray:
+        """Segment-sum ``edge_val(src, child)`` over OUT-edges grouped by
+        source — BC's backward gather, folded per hot table / cold tile."""
+        v = self.num_vertices
+        out = jnp.zeros((v,), jnp.float32)
+        for h in self.out_hot:
+            r, width = h.idx.shape
+            src = jnp.broadcast_to(h.rows[:, None], (r, width))
+            vals = edge_val(src, h.idx)
+            cols = jax.lax.broadcasted_iota(jnp.int32, (r, width), 1)
+            vals = jnp.where(cols < h.deg[:, None], vals, 0.0)
+            seg = jax.lax.broadcasted_iota(jnp.int32, (r, width), 0)
+            ys = jax.ops.segment_sum(vals.ravel(), seg.ravel(),
+                                     num_segments=r, indices_are_sorted=True)
+            out = out.at[h.rows].add(ys)
+        c = self.out_cold
+        if c.neigh.shape[0]:
+            vals = edge_val(c.owners, c.neigh)
+            ys = jax.ops.segment_sum(vals, c.seg,
+                                     num_segments=c.rows.shape[0],
+                                     indices_are_sorted=True)
+            out = out.at[c.rows].add(ys)
+        return out
+
+    def tree_flatten(self):
+        return ((self.in_tiles, self.out_hot, self.out_cold,
+                 self.in_deg, self.out_deg),
+                (self.row_tile, self.width_tile, self.interpret))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def packed_backend(pg: PackedGraph, *, row_tile: int = 64,
+                   width_tile: int = 128,
+                   interpret: bool = True) -> PackedBackend:
+    """Build the ``apps.engine`` backend for a ``PackedGraph``.
+
+    The pull direction becomes the fused-kernel tile set (hot slot tables
+    wrapped in place + cold rows decoded once, binned by the layout's own
+    boundaries); the push primitive rides the SAME tiles (transposed-pull
+    trick), so only BC's backward sweep touches the out direction.
+    """
+    in_adj = pg.in_adj
+    tiles = _hot_tiles(in_adj, row_tile, width_tile)
+    tiles += ell_tiles(in_adj.cold_csr(), in_adj.boundaries,
+                       row_tile=row_tile, width_tile=width_tile)
+    return PackedBackend(
+        in_tiles=tiles,
         out_hot=_hot_dev(pg.out_adj),
         out_cold=_cold_dev(pg.out_adj),
-        in_deg=jnp.asarray(pg.in_adj.degrees(), jnp.int32),
+        in_deg=jnp.asarray(in_adj.degrees(), jnp.int32),
         out_deg=jnp.asarray(pg.out_adj.degrees(), jnp.int32),
-    )
-
-
-def _segment(vals, seg, num, reduce):
-    if reduce == "sum":
-        return jax.ops.segment_sum(vals, seg, num_segments=num,
-                                   indices_are_sorted=True)
-    if reduce == "min":
-        return jax.ops.segment_min(vals, seg, num_segments=num,
-                                   indices_are_sorted=True)
-    if reduce in ("max", "or"):
-        return jax.ops.segment_max(vals, seg, num_segments=num,
-                                   indices_are_sorted=True)
-    raise ValueError(reduce)
-
-
-def _combine(out, rows, ys, reduce):
-    # rows are disjoint across hot groups + cold, and out starts at the
-    # reduction identity, so this scatter preserves each row's fold bits
-    if reduce == "sum":
-        return out.at[rows].add(ys)
-    if reduce == "min":
-        return out.at[rows].min(ys)
-    return out.at[rows].max(ys)
-
-
-def edge_map_pull_packed(
-    pa: PackedArrays,
-    prop: jnp.ndarray,
-    *,
-    reduce: str = "sum",
-    src_frontier: Optional[jnp.ndarray] = None,
-    use_weights: bool = False,
-    neutral: Optional[float] = None,
-):
-    """dst <- REDUCE over in-edges of f(prop[src]) — ``engine.edge_map_pull``
-    semantics over the packed pull direction (1-D properties)."""
-    if prop.ndim != 1:
-        raise ValueError("packed edge maps support 1-D properties")
-    if neutral is None:
-        neutral = _NEUTRAL[reduce]
-    v = pa.in_deg.shape[0]
-    out = jnp.full((v,), _NEUTRAL[reduce], dtype=prop.dtype)
-
-    for h in pa.in_hot:
-        r, width = h.idx.shape
-        vals = prop[h.idx]  # regular fixed-stride gather — still packed
-        if use_weights:
-            vals = vals + h.w
-        cols = jax.lax.broadcasted_iota(jnp.int32, (r, width), 1)
-        mask = cols < h.deg[:, None]
-        if src_frontier is not None:
-            mask = mask & src_frontier[h.idx]
-        vals = jnp.where(mask, vals, neutral)
-        seg = jax.lax.broadcasted_iota(jnp.int32, (r, width), 0)
-        ys = _segment(vals.ravel(), seg.ravel(), r, reduce)
-        out = _combine(out, h.rows, ys, reduce)
-
-    c = pa.in_cold
-    if c.neigh.shape[0]:
-        vals = prop[c.neigh]
-        if use_weights:
-            vals = vals + c.w
-        if src_frontier is not None:
-            vals = jnp.where(src_frontier[c.neigh], vals, neutral)
-        ys = _segment(vals, c.seg, c.rows.shape[0], reduce)
-        out = _combine(out, c.rows, ys, reduce)
-    return out
-
-
-def edge_map_push_packed(
-    pa: PackedArrays,
-    prop: jnp.ndarray,
-    *,
-    reduce: str = "min",
-    src_frontier: Optional[jnp.ndarray] = None,
-    use_weights: bool = False,
-    neutral: Optional[float] = None,
-    init: Optional[jnp.ndarray] = None,
-):
-    """dst <- REDUCE over pushes from (active) sources, packed out direction.
-
-    Padding slots push the identity element, so they can scatter unmasked.
-    min/max pushes are bit-identical to the flat engine; sum pushes agree
-    only up to reassociation (documented above).
-    """
-    if prop.ndim != 1:
-        raise ValueError("packed edge maps support 1-D properties")
-    if neutral is None:
-        neutral = _NEUTRAL[reduce]
-    v = pa.in_deg.shape[0]
-    if init is None:
-        init = jnp.full((v,), _NEUTRAL[reduce], dtype=prop.dtype)
-    out = init
-
-    def scatter(out, dst, vals):
-        if reduce == "sum":
-            return out.at[dst].add(vals)
-        if reduce == "min":
-            return out.at[dst].min(vals)
-        if reduce in ("max", "or"):
-            return out.at[dst].max(vals)
-        raise ValueError(reduce)
-
-    for h in pa.out_hot:
-        r, width = h.idx.shape
-        vals = jnp.broadcast_to(prop[h.rows][:, None], (r, width))
-        if use_weights:
-            vals = vals + h.w
-        cols = jax.lax.broadcasted_iota(jnp.int32, (r, width), 1)
-        mask = cols < h.deg[:, None]
-        if src_frontier is not None:
-            mask = mask & src_frontier[h.rows][:, None]
-        vals = jnp.where(mask, vals, neutral)
-        out = scatter(out, h.idx.ravel(), vals.ravel())
-
-    c = pa.out_cold
-    if c.neigh.shape[0]:
-        vals = prop[c.owners]
-        if use_weights:
-            vals = vals + c.w
-        if src_frontier is not None:
-            vals = jnp.where(src_frontier[c.owners], vals, neutral)
-        out = scatter(out, c.neigh, vals)
-    return out
-
-
-# ---------------------------------------------------------------------------
-# The evaluated apps, loop-for-loop equal to repro.apps over GraphArrays
-# ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("max_iters",))
-def pagerank_packed(
-    pa: PackedArrays,
-    *,
-    damping: float = 0.85,
-    max_iters: int = 64,
-    tol: float = 1e-7,
-):
-    """PageRank over packed storage — mirrors ``apps.pagerank`` exactly."""
-    v = pa.in_deg.shape[0]
-    out_deg = jnp.maximum(1, pa.out_deg).astype(jnp.float32)
-    dangling = (pa.out_deg == 0).astype(jnp.float32)
-
-    def cond(state):
-        _, it, err = state
-        return jnp.logical_and(it < max_iters, err > tol)
-
-    def body(state):
-        rank, it, _ = state
-        contrib = rank / out_deg
-        pulled = edge_map_pull_packed(pa, contrib, reduce="sum")
-        dangling_mass = jnp.sum(rank * dangling) / v
-        new = (1.0 - damping) / v + damping * (pulled + dangling_mass)
-        err = jnp.sum(jnp.abs(new - rank))
-        return new, it + 1, err
-
-    rank0 = jnp.full((v,), 1.0 / v, jnp.float32)
-    rank, iters, _ = jax.lax.while_loop(cond, body, (rank0, 0, jnp.inf))
-    return rank, iters
-
-
-@partial(jax.jit, static_argnames=("max_iters",))
-def sssp_packed(pa: PackedArrays, root: jnp.ndarray, *, max_iters: int = 0):
-    """Bellman-Ford over packed storage — mirrors ``apps.sssp`` exactly."""
-    v = pa.in_deg.shape[0]
-    max_iters = max_iters or v
-
-    dist0 = jnp.full((v,), jnp.inf, jnp.float32).at[root].set(0.0)
-    frontier0 = jnp.zeros((v,), bool).at[root].set(True)
-
-    def cond(state):
-        _, frontier, it = state
-        return jnp.logical_and(it < max_iters, jnp.any(frontier))
-
-    def body(state):
-        dist, frontier, it = state
-        cand = edge_map_push_packed(
-            pa, dist, reduce="min", src_frontier=frontier,
-            use_weights=True, neutral=jnp.inf, init=dist,
-        )
-        frontier = cand < dist
-        return cand, frontier, it + 1
-
-    dist, _, iters = jax.lax.while_loop(cond, body, (dist0, frontier0, 0))
-    return dist, iters
-
-
-def _out_pull_sum(pa: PackedArrays, edge_val_fn):
-    """segment-sum over OUT-edges grouped by source (BC's backward gather):
-    ``edge_val_fn(src_ids, child_ids) -> per-edge value``."""
-    v = pa.in_deg.shape[0]
-    out = jnp.zeros((v,), jnp.float32)
-    for h in pa.out_hot:
-        r, width = h.idx.shape
-        src = jnp.broadcast_to(h.rows[:, None], (r, width))
-        vals = edge_val_fn(src, h.idx)
-        cols = jax.lax.broadcasted_iota(jnp.int32, (r, width), 1)
-        vals = jnp.where(cols < h.deg[:, None], vals, 0.0)
-        seg = jax.lax.broadcasted_iota(jnp.int32, (r, width), 0)
-        ys = jax.ops.segment_sum(vals.ravel(), seg.ravel(), num_segments=r,
-                                 indices_are_sorted=True)
-        out = out.at[h.rows].add(ys)
-    c = pa.out_cold
-    if c.neigh.shape[0]:
-        vals = edge_val_fn(c.owners, c.neigh)
-        ys = jax.ops.segment_sum(vals, c.seg, num_segments=c.rows.shape[0],
-                                 indices_are_sorted=True)
-        out = out.at[c.rows].add(ys)
-    return out
-
-
-@partial(jax.jit, static_argnames=("max_iters",))
-def bc_packed(pa: PackedArrays, root: jnp.ndarray, *, max_iters: int = 0):
-    """Brandes BC over packed storage — mirrors ``apps.bc`` exactly."""
-    v = pa.in_deg.shape[0]
-    max_iters = max_iters or v
-
-    dist0 = jnp.full((v,), -1, jnp.int32).at[root].set(0)
-    sigma0 = jnp.zeros((v,), jnp.float32).at[root].set(1.0)
-    frontier0 = jnp.zeros((v,), bool).at[root].set(True)
-
-    def fcond(state):
-        _, _, frontier, it = state
-        return jnp.logical_and(it < max_iters, jnp.any(frontier))
-
-    def fbody(state):
-        dist, sigma, frontier, it = state
-        contrib = jnp.where(frontier, sigma, 0.0)
-        sig_new = edge_map_pull_packed(pa, contrib, reduce="sum")
-        reached = sig_new > 0.0
-        fresh = jnp.logical_and(reached, dist < 0)
-        dist = jnp.where(fresh, it + 1, dist)
-        sigma = jnp.where(fresh, sig_new, sigma)
-        return dist, sigma, fresh, it + 1
-
-    dist, sigma, _, levels = jax.lax.while_loop(
-        fcond, fbody, (dist0, sigma0, frontier0, 0)
-    )
-
-    sigma_safe = jnp.maximum(sigma, 1e-30)
-
-    def bbody(level, delta):
-        def edge_val(src, child):
-            ok = dist[child] == dist[src] + 1
-            return jnp.where(ok, (1.0 + delta[child]) / sigma_safe[child], 0.0)
-
-        summed = _out_pull_sum(pa, edge_val)
-        contrib = sigma * summed
-        on_level = dist == (levels - 1 - level)
-        return jnp.where(on_level, contrib, delta)
-
-    delta = jax.lax.fori_loop(0, levels, bbody, jnp.zeros((v,), jnp.float32))
-    centrality = jnp.where(dist >= 0, delta, 0.0).at[root].set(0.0)
-    return centrality, dist, levels
+        row_tile=row_tile, width_tile=width_tile, interpret=interpret)

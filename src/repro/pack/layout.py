@@ -135,6 +135,22 @@ class PackedAdjacency:
         deg[self.cold.rows] = self.cold.deg.astype(np.int64)
         return deg
 
+    def cold_csr(self) -> csr.CSR:
+        """Decode the cold segment into a full-V CSR (hot rows empty).
+
+        The decoded-tile view of the cold tail: the fused edge-map packer
+        (``kernels.edge_map.ops.ell_tiles``) bins rows by degree and skips
+        empty ones, so handing it this CSR tiles exactly the cold rows — the
+        hot slot tables never round-trip through it.
+        """
+        deg = np.zeros(self.num_vertices, np.int64)
+        deg[self.cold.rows] = self.cold.deg.astype(np.int64)
+        indptr = np.zeros(self.num_vertices + 1, np.int64)
+        np.cumsum(deg, out=indptr[1:])
+        return csr.CSR(indptr=indptr,
+                       indices=self.cold.neighbors().astype(np.int32),
+                       weights=self.cold.w)
+
     def decode_edges(self) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
         """(owner, neighbor, w) of every edge, hot-then-cold traversal order.
 

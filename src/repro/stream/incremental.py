@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.edge_map.edge_map import reduce_identity
 from .delta import ApplyResult, DeltaGraph, occurrence_rank
 
 __all__ = [
@@ -142,9 +143,6 @@ def stream_arrays(dg: DeltaGraph) -> StreamArrays:
     )
 
 
-_NEUTRAL = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf, "or": 0.0}
-
-
 def edge_map_pull_stream(
     sa: StreamArrays,
     prop: jnp.ndarray,
@@ -161,7 +159,7 @@ def edge_map_pull_stream(
     identity element (not 0.0, which absorbs under min).
     """
     if neutral is None:
-        neutral = _NEUTRAL[reduce]
+        neutral = reduce_identity(reduce)
     v = sa.in_deg.shape[0]
     vals = prop[sa.in_src]
     if use_weights:
@@ -211,10 +209,10 @@ def edge_map_push_stream(
     defaults to the reduction's identity element.
     """
     if neutral is None:
-        neutral = _NEUTRAL[reduce]
+        neutral = reduce_identity(reduce)
     v = sa.in_deg.shape[0]
     if init is None:
-        init = jnp.full((v,), _NEUTRAL[reduce], dtype=prop.dtype)
+        init = jnp.full((v,), reduce_identity(reduce), dtype=prop.dtype)
 
     def scatter(acc, src, dst, w, alive):
         vals = prop[src]
@@ -308,7 +306,7 @@ def edge_map_push_stream_fused(
     from ..kernels.edge_map.ops import fused_edge_map
 
     red = "max" if reduce == "or" else reduce
-    neutral = _NEUTRAL[reduce]
+    neutral = reduce_identity(reduce)
     if init is None:
         init = jnp.full((num_vertices,), neutral, dtype=prop.dtype)
     return fused_edge_map(
@@ -382,15 +380,53 @@ def _pr_converge(sa: StreamArrays, rank, residual, damping, epsilon,
     return jax.lax.while_loop(cond, body, (rank, residual, 0))
 
 
+@partial(jax.jit, static_argnames=("max_iters",))
+def _pr_converge_fused(base_tiles, delta_tiles, out_deg, rank, residual,
+                       damping, epsilon, max_iters: int):
+    """Fused-kernel twin of :func:`_pr_converge`: the forward push rides the
+    base+delta Pallas kernel (``edge_map_push_stream_fused``) the way
+    ``IncrementalSSSP(use_fused_push=True)`` already does — same invariant,
+    same loop, no edge-parallel scatter.  Sum pushes reassociate, so ranks
+    agree with the unfused loop to fp association (~1e-8), not bitwise."""
+    v = rank.shape[0]
+    dangling = out_deg == 0
+    odeg = jnp.maximum(1, out_deg).astype(jnp.float32)
+
+    def cond(state):
+        _, res, it = state
+        return jnp.logical_and(it < max_iters,
+                               jnp.max(jnp.abs(res)) > epsilon)
+
+    def body(state):
+        rank, res, it = state
+        moved = jnp.where(jnp.abs(res) > epsilon, res, 0.0)
+        contrib = jnp.where(dangling, 0.0, moved / odeg)
+        pushed = edge_map_push_stream_fused(
+            base_tiles, delta_tiles, contrib, v, reduce="sum")
+        dmass = jnp.sum(jnp.where(dangling, moved, 0.0)) / v
+        res = res - moved + damping * (pushed + dmass)
+        return rank + moved, res, it + 1
+
+    return jax.lax.while_loop(cond, body, (rank, residual, 0))
+
+
 class IncrementalPageRank:
-    """PageRank that re-converges from batch-local residual mass."""
+    """PageRank that re-converges from batch-local residual mass.
+
+    ``use_fused_push=True`` routes the push-convergence loop through the
+    fused base+delta Pallas kernel (``stream_push_tiles`` +
+    :func:`_pr_converge_fused`); the exact-residual resync and ingest stay
+    identical, so the invariant is maintained either way.
+    """
 
     def __init__(self, dg: DeltaGraph, *, damping: float = 0.85,
-                 epsilon: float = 1e-9, max_iters: int = 4096):
+                 epsilon: float = 1e-9, max_iters: int = 4096,
+                 use_fused_push: bool = False):
         self.dg = dg
         self.damping = float(damping)
         self.epsilon = float(epsilon)
         self.max_iters = int(max_iters)
+        self.use_fused_push = bool(use_fused_push)
         v = dg.num_vertices
         self.rank = np.full(v, 1.0 / v, np.float32)
         self._residual = np.zeros(v, np.float32)
@@ -475,10 +511,17 @@ class IncrementalPageRank:
             self._residual = (self._residual.astype(np.float64)
                               + self._res_uniform).astype(np.float32)
             self._res_uniform = 0.0
-        rank, res, it = _pr_converge(
-            sa, jnp.asarray(self.rank), jnp.asarray(self._residual),
-            jnp.float32(self.damping), jnp.float32(self.epsilon),
-            self.max_iters)
+        if self.use_fused_push:
+            base_tiles, delta_tiles = stream_push_tiles(self.dg)
+            rank, res, it = _pr_converge_fused(
+                base_tiles, delta_tiles, sa.out_deg, jnp.asarray(self.rank),
+                jnp.asarray(self._residual), jnp.float32(self.damping),
+                jnp.float32(self.epsilon), self.max_iters)
+        else:
+            rank, res, it = _pr_converge(
+                sa, jnp.asarray(self.rank), jnp.asarray(self._residual),
+                jnp.float32(self.damping), jnp.float32(self.epsilon),
+                self.max_iters)
         self.rank = np.asarray(rank)
         # writable copy: ingest patches the residual in place batch-locally
         self._residual = np.array(res)

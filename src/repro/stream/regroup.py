@@ -60,6 +60,32 @@ class RemapDelta:
     def num_moved(self) -> int:
         return int(self.moved.shape[0])
 
+    @classmethod
+    def merge(cls, deltas: "List[RemapDelta]") -> "RemapDelta":
+        """Coalesce a delta sequence into one net move set.
+
+        A vertex keeps its FIRST old group and LAST new group; vertices that
+        ended up back where they started drop out entirely — exactly what a
+        consumer applying the deltas in one shot (``repro.dist.graph.
+        apply_remap``) needs.  Seconds accumulate; ``spec_rebuilt`` ORs.
+        """
+        if not deltas:
+            return cls(moved=np.zeros(0, np.int64),
+                       old_group=np.zeros(0, np.int64),
+                       new_group=np.zeros(0, np.int64),
+                       spec_rebuilt=False, seconds=0.0)
+        moved = np.concatenate([d.moved for d in deltas]).astype(np.int64)
+        old_g = np.concatenate([d.old_group for d in deltas]).astype(np.int64)
+        new_g = np.concatenate([d.new_group for d in deltas]).astype(np.int64)
+        uniq, first = np.unique(moved, return_index=True)
+        _, last_rev = np.unique(moved[::-1], return_index=True)
+        last = moved.shape[0] - 1 - last_rev
+        keep = old_g[first] != new_g[last]
+        return cls(moved=uniq[keep], old_group=old_g[first][keep],
+                   new_group=new_g[last][keep],
+                   spec_rebuilt=any(d.spec_rebuilt for d in deltas),
+                   seconds=float(sum(d.seconds for d in deltas)))
+
 
 class IncrementalDBG:
     def __init__(
@@ -129,6 +155,13 @@ class IncrementalDBG:
         """Hysteresis-free assignment of the current degrees (the batch-DBG
         reference the incremental state is validated against)."""
         return _assign_groups(self.degrees, self.spec.boundaries)
+
+    def hot_ids(self, num_hot_groups: int) -> np.ndarray:
+        """Vertices currently in the ``num_hot_groups`` hottest groups —
+        the live hot set a sharded layout replicates (what
+        ``shard_graph(hot_override=...)`` takes when rebuilding after a
+        ``RemapOverflow``)."""
+        return np.flatnonzero(self.group_of < int(num_hot_groups))
 
     # -- updates --------------------------------------------------------------
     def update(self, vertices: np.ndarray, new_degrees: np.ndarray) -> RemapDelta:

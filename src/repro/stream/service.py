@@ -119,6 +119,9 @@ class StreamConfig:
     # stream hook), so layout-sensitive consumers always see a packed layout
     # of the CURRENT base rather than a stale snapshot
     repack_on_compact: bool = False
+    # route the incremental-PageRank push loop through the fused base+delta
+    # Pallas kernel (the same switch IncrementalSSSP exposes)
+    pr_fused_push: bool = False
     hysteresis: float = 0.25
     spec_drift_tol: float = 0.2
     damping: float = 0.85
@@ -145,7 +148,8 @@ class StreamService:
         self.pr = IncrementalPageRank(
             self.dg, damping=self.config.damping,
             epsilon=self.config.pr_epsilon,
-            max_iters=self.config.pr_max_iters)
+            max_iters=self.config.pr_max_iters,
+            use_fused_push=self.config.pr_fused_push)
         self.regrouper = (
             IncrementalDBG(self.dg.out_deg,
                            hysteresis=self.config.hysteresis,
@@ -159,6 +163,7 @@ class StreamService:
         self.compactions = 0
         self.history: List[IngestStats] = []
         self.remap_deltas: List[RemapDelta] = []
+        self._remaps_consumed = 0  # prefix already routed to a sharded layout
         # batch SOURCES since the last regroup pass (regroup_every > 1 must
         # not drop degree updates from skipped batches; destination-only
         # vertices never change out-degree, so the regrouper — which bins on
@@ -226,6 +231,31 @@ class StreamService:
     def current_mapping(self) -> Optional[np.ndarray]:
         return (self.regrouper.current_mapping()
                 if self.regrouper is not None else None)
+
+    def apply_remaps_to(self, sg):
+        """Route the accumulated ``RemapDelta``s into a sharded layout.
+
+        Shard-aware update routing: the deltas emitted since the last call
+        are merged (net group moves only) and fed to
+        ``repro.dist.graph.apply_remap``, which re-homes exactly the vertices
+        that crossed a hot/cold group boundary — instead of re-sharding the
+        deployment from a full ``current_mapping()``.  Returns the patched
+        layout; on ``RemapOverflow`` (drift exceeded the layout's reserved
+        headroom) the caller should rebuild via ``shard_graph`` with
+        ``hot_override=self.regrouper.hot_ids(sg.hot_group_count)`` — the
+        deltas stay UNCONSUMED in that case (a later call replays them as
+        no-ops against the rebuilt layout, so no drift is lost).  Topology
+        deltas are NOT applied here (the sharded layout keeps its snapshot;
+        see ROADMAP) — this tracks the grouping, the performance-critical
+        part of the paper's argument.
+        """
+        from ..dist.graph import apply_remap
+
+        consumed = len(self.remap_deltas)
+        out = apply_remap(
+            sg, RemapDelta.merge(self.remap_deltas[self._remaps_consumed:]))
+        self._remaps_consumed = consumed  # only after apply_remap succeeded
+        return out
 
     def snapshot(self) -> csr.Graph:
         return self.dg.snapshot()

@@ -62,6 +62,12 @@ for policy in ("replicate_hot", "partition"):
     assert int(iters) == int(ref_iters)
     np.testing.assert_allclose(np.asarray(ranks), np.asarray(ref),
                                rtol=1e-5, atol=1e-9)
+# fused per-shard backend: same ranks (sum reassociation may save/cost an
+# iteration near tol, so only the values are asserted)
+ranks, iters, sg = pagerank_dist(g, mesh=mesh, backend="ell", max_iters=50)
+assert sg.backend == "ell" and sg.pull_tiles is not None
+np.testing.assert_allclose(np.asarray(ranks), np.asarray(ref),
+                           rtol=1e-5, atol=1e-9)
 print("OK")
 """)
 

@@ -219,6 +219,37 @@ def test_incremental_pagerank_matches_full_recompute(base_graph):
     assert saw_compaction, "compaction threshold never triggered"
 
 
+def test_incremental_pagerank_fused_push_parity(base_graph):
+    """_pr_converge routed through the fused base+delta kernel (the
+    IncrementalSSSP(use_fused_push=True) treatment): ranks agree with the
+    unfused push loop to 1e-8 across insert+delete batches (sum pushes
+    reassociate, so bitwise is not the contract — 1e-8 is)."""
+    dg_a, dg_b = DeltaGraph(base_graph), DeltaGraph(base_graph)
+    flat = IncrementalPageRank(dg_a)
+    fused = IncrementalPageRank(dg_b, use_fused_push=True)
+    rng = np.random.default_rng(11)
+    for _ in range(3):
+        a_s, a_d, d_s, d_d = _random_batch(dg_a, rng, n_add=60, n_del=15)
+        flat.ingest(dg_a.apply(add_src=a_s, add_dst=a_d,
+                               del_src=d_s, del_dst=d_d))
+        fused.ingest(dg_b.apply(add_src=a_s, add_dst=a_d,
+                                del_src=d_s, del_dst=d_d))
+        np.testing.assert_allclose(flat.query(), fused.query(), atol=1e-8)
+    # both converged to the true PR of the current graph
+    full, _ = pagerank(to_arrays(dg_b.snapshot()), tol=1e-10, max_iters=256)
+    np.testing.assert_allclose(fused.query(), np.asarray(full), atol=1e-5)
+
+
+def test_service_pr_fused_push_config(base_graph):
+    svc = StreamService(base_graph, StreamConfig(pr_fused_push=True))
+    assert svc.pr.use_fused_push
+    rng = np.random.default_rng(12)
+    a_s, a_d, d_s, d_d = _random_batch(svc.dg, rng)
+    svc.ingest(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+    full, _ = pagerank(to_arrays(svc.snapshot()), tol=1e-10, max_iters=256)
+    np.testing.assert_allclose(svc.pagerank(), np.asarray(full), atol=1e-5)
+
+
 def test_incremental_pagerank_converges_faster_than_cold_start(base_graph):
     """A small batch perturbs few vertices: warm re-convergence must take
     fewer push iterations than the initial cold solve."""
