@@ -2,13 +2,14 @@
 import json
 import sys
 
-from . import beyond_paper, lm_benches, paper_figures, paper_tables
+from . import beyond_paper, lm_benches, paper_figures, paper_tables, serve_qps
 
 
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     benches = (paper_tables.BENCHES + paper_figures.BENCHES
-               + lm_benches.BENCHES + beyond_paper.BENCHES)
+               + lm_benches.BENCHES + beyond_paper.BENCHES
+               + serve_qps.BENCHES)
     print("name,us_per_call,derived")
     failures = 0
     for fn in benches:

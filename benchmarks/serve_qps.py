@@ -1,0 +1,167 @@
+"""Serving throughput under churn: QPS vs batch width K → BENCH_serve.json.
+
+The serving claim of ``repro.serve``: K concurrent queries share ONE fused
+edge-map pass per iteration, so widening the batch raises QPS — while a
+skew-preserving update stream (``stream_churn.ChurnStream``) keeps landing
+delta batches between dispatches and snapshot isolation keeps every answer
+pinned to one published graph version.
+
+Per width K the harness replays the SAME deterministic workload twice
+(stream_churn's warmup discipline — churn changes array shapes every publish,
+so the first pass absorbs every jit compile and the second is timed):
+
+  burst = ingest one churn batch (publishes a snapshot)
+        → submit K queries (alternating sssp / personalized-pagerank bursts)
+        → drain
+
+and reports QPS (queries / wall-clock including the ingest share), latency
+p50/p99, and batch occupancy from ``ServeMetrics``.  Every published version
+is pinned during the timed pass, and a sampled SSSP answer is re-solved
+from scratch on its pinned version graph and asserted BITWISE equal — the
+snapshot-isolation check rides inside the benchmark.
+
+Usage:
+  PYTHONPATH=src python benchmarks/serve_qps.py [--dataset kr]
+      [--scale small] [--widths 1,2,4,8] [--queries 24] [--churn 128]
+      [--backend flat] [--out BENCH_serve.json] [--smoke]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import to_arrays
+from repro.graph import datasets
+from repro.serve import (GraphServeService, Query, ServeConfig, batched_sssp)
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from stream_churn import ChurnStream  # noqa: E402
+
+
+def bench_width(g, k: int, *, queries: int, churn: int, backend: str,
+                seed: int = 0) -> dict:
+    """(QPS, latency, occupancy) for batch width K over the churn stream."""
+    v = g.num_vertices
+    results, pins, elapsed = [], {}, 0.0
+    for timed in (False, True):  # identical passes; first absorbs compiles
+        svc = GraphServeService(g, ServeConfig(
+            max_width=k, max_depth=4 * k, backend=backend,
+            pr_max_iters=15, publish_every=1))
+        stream = ChurnStream(g, seed=seed)
+        rng = np.random.default_rng(seed + 1)
+        results, pins = [], {}
+        t0 = time.perf_counter()
+        burst = 0
+        while len(results) < queries:
+            a_s, a_d, d_s, d_d = stream.next_batch(svc.stream.dg, churn)
+            svc.ingest(add_src=a_s, add_dst=a_d, del_src=d_s, del_dst=d_d)
+            if timed:
+                pins[svc.snapshot_version] = svc.store.acquire()
+            kind = "sssp" if burst % 2 == 0 else "pagerank"
+            for _ in range(min(k, queries - len(results))):
+                svc.submit(Query(kind, root=int(rng.integers(0, v))))
+            results.extend(svc.drain())
+            burst += 1
+        elapsed = time.perf_counter() - t0
+        if not timed:
+            continue
+        # snapshot isolation, asserted inside the harness: a served SSSP
+        # answer re-solved from scratch on its PINNED version graph is
+        # bitwise identical, however much churn landed after its pin
+        sample = next(r for r in reversed(results) if r.kind == "sssp")
+        snap = pins[sample.snapshot_version]
+        root = int(np.flatnonzero(sample.value == 0.0)[0])
+        ref, _ = batched_sssp(to_arrays(snap.graph, backend=backend),
+                              jnp.asarray([root], jnp.int32))
+        np.testing.assert_array_equal(sample.value, np.asarray(ref[:, 0]))
+        for snap in pins.values():
+            svc.store.release(snap)
+        summary = svc.metrics.summary()
+    return {
+        "width": k,
+        "qps": round(len(results) / elapsed, 3),
+        "latency_p50_ms": summary["latency_p50_ms"],
+        "latency_p99_ms": summary["latency_p99_ms"],
+        "occupancy": summary["occupancy"],
+        "batches": summary["batches"],
+        "ingest_batches": burst,
+        "isolation_checked": True,
+    }
+
+
+def serve_qps_pointer():
+    """``benchmarks.run`` entry: the smoke cells (widths 1 and 4), returning
+    the QPS-vs-width ratio as the derived value."""
+    t0 = time.perf_counter()
+    g = datasets.load("kr", "test", seed=0)
+    cells = [bench_width(g, k, queries=8, churn=32, backend="flat")
+             for k in (1, 4)]
+    derived = {"qps_by_width": {str(c["width"]): c["qps"] for c in cells},
+               "widest_over_serial_qps": round(
+                   cells[-1]["qps"] / cells[0]["qps"], 2),
+               "isolation_checked": all(c["isolation_checked"]
+                                        for c in cells)}
+    return (time.perf_counter() - t0) * 1e6, derived
+
+
+BENCHES = [serve_qps_pointer]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="kr")
+    ap.add_argument("--scale", default="small")
+    ap.add_argument("--widths", default="1,2,4,8")
+    ap.add_argument("--queries", type=int, default=24,
+                    help="queries served per width cell")
+    ap.add_argument("--churn", type=int, default=128,
+                    help="update-batch size ingested before every burst")
+    ap.add_argument("--backend", default="flat")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: test scale, widths 1,4, 8 queries")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_serve.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.scale, args.widths = "test", "1,4"
+        args.queries, args.churn = 8, 32
+    widths = [int(w) for w in args.widths.split(",")]
+
+    g = datasets.load(args.dataset, args.scale, seed=0)
+    out = {"dataset": args.dataset, "scale": args.scale,
+           "backend": args.backend, "queries_per_cell": args.queries,
+           "churn_batch": args.churn, "cells": []}
+    for k in widths:
+        cell = bench_width(g, k, queries=args.queries, churn=args.churn,
+                           backend=args.backend)
+        out["cells"].append(cell)
+        print(f"[serve_qps] K={k}: {cell['qps']:.2f} qps, p50 "
+              f"{cell['latency_p50_ms']:.1f} ms, p99 "
+              f"{cell['latency_p99_ms']:.1f} ms, occupancy "
+              f"{cell['occupancy']:.2f}", flush=True)
+
+    qps = [c["qps"] for c in out["cells"]]
+    out["summary"] = {
+        "qps_by_width": {str(c["width"]): c["qps"] for c in out["cells"]},
+        "qps_increases_with_width": qps[-1] > qps[0],
+        "widest_over_serial_qps": round(qps[-1] / qps[0], 2),
+        "isolation_checked": all(c["isolation_checked"]
+                                 for c in out["cells"]),
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[serve_qps] wrote {args.out} (qps_increases_with_width="
+          f"{out['summary']['qps_increases_with_width']}, widest/serial="
+          f"{out['summary']['widest_over_serial_qps']}x)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

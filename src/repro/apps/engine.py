@@ -133,8 +133,8 @@ def _pull_flat(
         w = ga.in_w if vals.ndim == 1 else ga.in_w[:, None]
         vals = vals + w  # SSSP-style relaxation uses additive weights
     if src_frontier is not None:
-        m = src_frontier[ga.in_src]
-        if vals.ndim > 1:
+        m = src_frontier[ga.in_src]  # (E,) shared or (E, K) per-query
+        if vals.ndim > 1 and m.ndim == 1:
             m = m[:, None]
         vals = jnp.where(m, vals, neutral)
     v = ga.in_deg.shape[0]
@@ -165,8 +165,8 @@ def _push_flat(
         w = ga.out_w if vals.ndim == 1 else ga.out_w[:, None]
         vals = vals + w
     if src_frontier is not None:
-        m = src_frontier[ga.out_src]
-        if vals.ndim > 1:
+        m = src_frontier[ga.out_src]  # (E,) shared or (E, K) per-query
+        if vals.ndim > 1 and m.ndim == 1:
             m = m[:, None]
         vals = jnp.where(m, vals, neutral)
     v = ga.in_deg.shape[0]
@@ -308,21 +308,16 @@ class FusedEdgeMaps:
 
     def pull(self, prop, *, reduce="sum", src_frontier=None,
              use_weights=False, neutral=0.0):
-        kw = dict(reduce=reduce, src_frontier=src_frontier,
-                  use_weights=use_weights, neutral=neutral, init=None)
-        if prop.ndim == 2:  # multi-source apps (Radii): one lane per column
-            cols = [self._map1(prop[:, s], **kw)
-                    for s in range(prop.shape[1])]
-            return jnp.stack(cols, axis=1)
-        return self._map1(prop, **kw)
+        # (V, K) planes (Radii samples, repro.serve batched queries) run as
+        # ONE fused pass: all K lanes share the tile/idx/frontier traffic.
+        return self._map1(prop, reduce=reduce, src_frontier=src_frontier,
+                          use_weights=use_weights, neutral=neutral, init=None)
 
     def push(self, prop, *, reduce="sum", src_frontier=None,
              use_weights=False, neutral=0.0, init=None):
-        if prop.ndim != 1:
-            raise NotImplementedError("fused push is 1-D (no app needs 2-D)")
         if init is None:
-            init = jnp.full((self.num_vertices,), reduce_identity(reduce),
-                            dtype=prop.dtype)
+            init = jnp.full((self.num_vertices,) + tuple(prop.shape[1:]),
+                            reduce_identity(reduce), dtype=prop.dtype)
         return self._map1(prop, reduce=reduce, src_frontier=src_frontier,
                           use_weights=use_weights, neutral=neutral, init=init)
 

@@ -19,7 +19,12 @@ weight add → frontier mask → segment reduce / scatter) into a single kernel:
     (``dst <- min(init[dst], ...)``), fusing the flat path's separate
     ``init.at[dst].min`` scatter into the same pass;
   * an optional alive bitplane masks tombstoned edges (the ``repro.stream``
-    base segment) without rebuilding tiles per batch.
+    base segment) without rebuilding tiles per batch;
+  * the property may be a 2D **plane** ``(V, K)`` — K queries (personalized-
+    PageRank vectors, SSSP roots, BFS sources) ride one pass, amortizing the
+    tile/idx/frontier traffic across all K lanes (the ``repro.serve`` batched
+    serving path); the frontier may then be per-query ``(V, K)`` so finished
+    queries stop contributing work.
 
 Push mode needs no scatter at all: a push with a reduction into destinations
 is the pull of the transposed direction, so the same in-direction tiles serve
@@ -91,21 +96,27 @@ def _make_kernel(reduce: str, has_w: bool, unit_weights: bool,
             else:
                 y_ref[...] = jnp.full_like(y_ref, identity)
 
-        x = x_ref[...]  # (V,) property vector, VMEM-resident
+        x = x_ref[...]  # (V,) vector or (V, K) plane, VMEM-resident
         idx = idx_ref[...].astype(jnp.int32)  # storage may be minimal-width
         tr, tw = idx.shape
         vals = x[idx]  # THE irregular gather of the paper, now in VMEM
+        planar = vals.ndim == 3  # (TR, TW, K) — K query lanes per slot
         if has_w:
-            vals = vals + w_ref[...]  # SSSP-style additive relaxation
+            w = w_ref[...]  # per-edge weights are shared across lanes
+            vals = vals + (w[..., None] if planar else w)
         elif unit_weights:
             vals = vals + jnp.asarray(1.0, vals.dtype)  # no plane read
         if has_frontier:
-            active = fr_ref[...][idx] > 0
+            active = fr_ref[...][idx] > 0  # (TR, TW) or (TR, TW, K)
+            if planar and active.ndim == 2:  # shared (V,) frontier
+                active = active[..., None]
             vals = jnp.where(active, vals, neutral)
         cols = jax.lax.broadcasted_iota(jnp.int32, (tr, tw), 1) + wi * tw
         valid = cols < deg_ref[...][:, None]  # ELL padding lanes
         if has_alive:
             valid = jnp.logical_and(valid, al_ref[...] > 0)
+        if planar:
+            valid = valid[..., None]
         vals = jnp.where(valid, vals, identity)
         if reduce == "sum":
             y_ref[...] += jnp.sum(vals, axis=1)
@@ -119,20 +130,29 @@ def _make_kernel(reduce: str, has_w: bool, unit_weights: bool,
 
 def edge_map_tile_bytes(r_pad: int, w_pad: int, num_vertices: int, *,
                         weighted: bool, frontier: bool, alive: bool,
-                        init: bool, idx_itemsize: int = 4) -> int:
-    """Single-pass HBM bytes of one fused tile call (the CostEstimate)."""
+                        init: bool, idx_itemsize: int = 4,
+                        plane_k: int = 1,
+                        frontier_planar: bool = False) -> int:
+    """Single-pass HBM bytes of one fused tile call (the CostEstimate).
+
+    ``plane_k`` is the batched-query lane count: the property/init/output
+    bytes scale with K while the tile structure (idx/w/alive/deg) is read
+    ONCE for all K lanes — the amortization ``repro.serve`` banks on.
+    ``frontier_planar`` marks a per-query (V, K) frontier (K byte-vectors)
+    vs one shared (V,) vector.
+    """
     b = r_pad * w_pad * idx_itemsize  # idx plane (minimal-width ids)
     if weighted:
         b += r_pad * w_pad * 4  # w plane
     if alive:
         b += r_pad * w_pad  # int8 alive plane
     b += r_pad * 4  # deg
-    b += num_vertices * 4  # x (VMEM-resident across steps; counted once)
+    b += num_vertices * 4 * plane_k  # x (VMEM-resident; counted once)
     if frontier:
-        b += num_vertices  # int8 frontier vector
+        b += num_vertices * (plane_k if frontier_planar else 1)  # int8
     if init:
-        b += r_pad * 4
-    b += r_pad * 4  # y
+        b += r_pad * 4 * plane_k
+    b += r_pad * 4 * plane_k  # y
     return b
 
 
@@ -159,6 +179,11 @@ def ell_edge_map_pallas(
     == 0; ops.py pads).  ``frontier`` is a (V,) vector (nonzero == active
     source); ``alive`` an optional (R, W) bitplane.  ``identity`` defaults to
     the reduction's identity — integer-sourced callers pass a finite one.
+
+    Batched mode: ``x`` may be a (V, K) plane, in which case ``y`` is (R, K),
+    ``init_rows`` (when given) is (R, K), and ``frontier`` may be either the
+    shared (V,) vector or a per-query (V, K) plane — K queries share one pass
+    over the tile structure.
     """
     if reduce not in REDUCE_IDENTITY:
         raise ValueError(reduce)
@@ -167,19 +192,33 @@ def ell_edge_map_pallas(
         idx.shape, row_tile, width_tile)
     if identity is None:
         identity = REDUCE_IDENTITY[reduce]
+    planar = x.ndim == 2
+    k = x.shape[1] if planar else None
     grid = (r // row_tile, width // width_tile)
-    x_spec = pl.BlockSpec((x.shape[0],), lambda i, j: (0,))
+    if planar:
+        x_spec = pl.BlockSpec((x.shape[0], k), lambda i, j: (0, 0))
+        row_spec = pl.BlockSpec((row_tile, k), lambda i, j: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((r, k), x.dtype)
+    else:
+        x_spec = pl.BlockSpec((x.shape[0],), lambda i, j: (0,))
+        row_spec = pl.BlockSpec((row_tile,), lambda i, j: (i,))
+        out_shape = jax.ShapeDtypeStruct((r,), x.dtype)
     tile_spec = pl.BlockSpec((row_tile, width_tile), lambda i, j: (i, j))
-    row_spec = pl.BlockSpec((row_tile,), lambda i, j: (i,))
+    deg_spec = pl.BlockSpec((row_tile,), lambda i, j: (i,))
 
     args = [x, idx, deg]
-    in_specs = [x_spec, tile_spec, row_spec]
+    in_specs = [x_spec, tile_spec, deg_spec]
     if w is not None:
         args.append(w)
         in_specs.append(tile_spec)
     if frontier is not None:
         args.append(frontier)
-        in_specs.append(pl.BlockSpec((frontier.shape[0],), lambda i, j: (0,)))
+        if frontier.ndim == 2:
+            in_specs.append(pl.BlockSpec((frontier.shape[0], k),
+                                         lambda i, j: (0, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((frontier.shape[0],),
+                                         lambda i, j: (0,)))
     if alive is not None:
         args.append(alive)
         in_specs.append(tile_spec)
@@ -192,19 +231,21 @@ def ell_edge_map_pallas(
         frontier is not None, alive is not None, init_rows is not None,
         float(neutral), float(identity))
     cost = pl.CostEstimate(
-        flops=2 * r * width,
+        flops=2 * r * width * (k or 1),
         bytes_accessed=edge_map_tile_bytes(
             r, width, x.shape[0], weighted=w is not None,
             frontier=frontier is not None, alive=alive is not None,
             init=init_rows is not None,
-            idx_itemsize=idx.dtype.itemsize),
+            idx_itemsize=idx.dtype.itemsize,
+            plane_k=k or 1,
+            frontier_planar=frontier is not None and frontier.ndim == 2),
         transcendentals=0)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=row_spec,
-        out_shape=jax.ShapeDtypeStruct((r,), x.dtype),
+        out_shape=out_shape,
         cost_estimate=cost,
         interpret=interpret,
     )(*args)

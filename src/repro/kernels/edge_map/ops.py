@@ -369,20 +369,25 @@ def fused_edge_map(
     the accumulator is seeded per-row inside the kernel, fusing the separate
     ``init.at[dst].op`` scatter.  ``extra_tiles`` (delta segments whose rows
     duplicate primary rows) fold in with the reduction's scatter-op.
+
+    ``x`` may be a (V, K) plane (K batched queries, one pass over the tiles);
+    ``init`` is then (V, K) and ``src_frontier`` either shared (V,) or
+    per-query (V, K).
     """
     if identity is None:
         identity = REDUCE_IDENTITY[reduce]
     frontier = None
     if src_frontier is not None:
         frontier = src_frontier.astype(jnp.int8)
-    out = jnp.full((num_vertices,), identity, x.dtype) if init is None \
+    out_shape = (num_vertices,) + tuple(x.shape[1:])
+    out = jnp.full(out_shape, identity, x.dtype) if init is None \
         else init.astype(x.dtype)
     for t in tiles:
         r_pad, w_pad = t.idx.shape
         init_rows = None
         if init is not None:
-            init_rows = jnp.full((r_pad,), identity, x.dtype).at[
-                : t.num_rows].set(out[t.rows])
+            init_rows = jnp.full((r_pad,) + tuple(x.shape[1:]), identity,
+                                 x.dtype).at[: t.num_rows].set(out[t.rows])
         y = ell_edge_map_pallas(
             x, t.idx, t.deg,
             reduce=reduce,
@@ -425,10 +430,16 @@ def fused_edge_map_bytes(
     frontier: bool = False,
     push_init: bool = False,
     extra_tiles: Tuple[EllTileGroup, ...] = (),
+    plane_k: int = 1,
+    frontier_planar: bool = False,
 ) -> int:
     """Single-pass HBM bytes of one fused edge map (sum of tile CostEstimates
-    plus the O(V) combine write) — the number BENCH_apps.json reports."""
-    total = num_vertices * 4  # combine write
+    plus the O(V) combine write) — the number BENCH_apps.json reports.
+
+    ``plane_k > 1`` prices a batched (V, K) property plane: property/output
+    bytes scale with K, the tile structure is read once — dividing by K gives
+    the per-query cost curve ``BENCH_serve.json`` reports."""
+    total = num_vertices * 4 * plane_k  # combine write
     for t in tuple(tiles) + tuple(extra_tiles):
         r_pad, w_pad = t.idx.shape
         total += edge_map_tile_bytes(
@@ -437,5 +448,7 @@ def fused_edge_map_bytes(
             frontier=frontier,
             alive=t.alive is not None,
             init=push_init,
-            idx_itemsize=t.idx.dtype.itemsize)
+            idx_itemsize=t.idx.dtype.itemsize,
+            plane_k=plane_k,
+            frontier_planar=frontier_planar)
     return total

@@ -27,18 +27,25 @@ def ell_edge_map_ref(
     if identity is None:
         identity = REDUCE_IDENTITY[reduce]
     r, width = idx.shape
-    vals = x[idx]
+    vals = x[idx]  # (R, W) or, for a (V, K) property plane, (R, W, K)
+    planar = vals.ndim == 3
     if w is not None:
-        vals = vals + w
+        vals = vals + (w[..., None] if planar else w)
     elif unit_weights:
         vals = vals + jnp.asarray(1.0, vals.dtype)
     if frontier is not None:
-        vals = jnp.where(frontier[idx] > 0, vals, neutral)
+        active = frontier[idx] > 0
+        if planar and active.ndim == 2:
+            active = active[..., None]
+        vals = jnp.where(active, vals, neutral)
     valid = jnp.arange(width, dtype=jnp.int32)[None, :] < deg[:, None]
     if alive is not None:
         valid = jnp.logical_and(valid, alive > 0)
+    if planar:
+        valid = valid[..., None]
     vals = jnp.where(valid, vals, identity)
-    acc = jnp.full((r,), identity, x.dtype) if init_rows is None else init_rows
+    shape = (r, x.shape[1]) if planar else (r,)
+    acc = jnp.full(shape, identity, x.dtype) if init_rows is None else init_rows
     if reduce == "sum":
         return acc + jnp.sum(vals, axis=1)
     if reduce == "min":

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..configs.base import reduced
 from ..lm import model as model_mod
-from ..serve.engine import generate
+from ..lm.serve import generate
 
 
 def main(argv=None) -> int:

@@ -1,0 +1,55 @@
+"""LM serving scaffold: prefill + greedy decode loop with explicit caches.
+
+Lives under ``repro.lm`` — ``repro.serve`` is the GRAPH-query serving plane
+(batched PageRank/SSSP over snapshot-isolated ingest); this decode loop is
+the language-model sibling and only shares the batching mindset.
+(Moved from ``repro.serve.engine``, which now re-exports with a
+``DeprecationWarning``.)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import model as model_mod
+
+__all__ = ["generate"]
+
+
+def generate(
+    params,
+    cfg: ArchConfig,
+    prompt: jnp.ndarray,  # (B, S_prompt) int32
+    max_new: int = 16,
+    max_len: Optional[int] = None,
+    cache_dtype=jnp.float32,
+):
+    """Greedy generation.  Prefill is performed token-by-token through the
+    decode path (identical math to full forward — tested); production prefill
+    uses the full-sequence forward with cache writeback."""
+    b, sp = prompt.shape
+    max_len = max_len or (sp + max_new + 1)
+    cache = model_mod.init_cache(cfg, b, max_len=max_len, dtype=cache_dtype)
+    step = jax.jit(
+        lambda p, c, t: model_mod.decode_step(p, cfg, c, t),
+        donate_argnums=(1,),
+    )
+
+    def pick(lg):
+        # mask the padded-vocab tail (Megatron-style padding; embed.py)
+        lg = lg[:, -1:, : cfg.vocab_size]
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    logits = None
+    for t in range(sp):
+        logits, cache = step(params, cache, prompt[:, t : t + 1])
+    out = [prompt]
+    tok = pick(logits)
+    for _ in range(max_new):
+        out.append(tok)
+        logits, cache = step(params, cache, tok)
+        tok = pick(logits)
+    return jnp.concatenate(out, axis=1)

@@ -1,1 +1,24 @@
-from .engine import generate  # noqa: F401
+"""repro.serve — multi-tenant batched graph-query serving.
+
+K concurrent PageRank/SSSP queries share ONE fused edge-map pass per
+iteration (a 2D ``(V, K)`` property plane on any ``engine.BACKENDS``
+backend), fed by a bounded admission queue and answered against
+refcounted immutable snapshots so ``StreamService`` ingest never blocks —
+or corrupts — an in-flight batch.
+
+The LM decode scaffold that used to live here moved to ``repro.lm.serve``
+(``repro.serve.engine`` remains as a deprecation shim).
+"""
+from .batch import PendingQuery, Query, QueryQueue, QueueFull  # noqa: F401
+from .batched import (batch_frontier_density, batched_pagerank,  # noqa: F401
+                      batched_sssp)
+from .metrics import ServeMetrics  # noqa: F401
+from .service import GraphServeService, QueryResult, ServeConfig  # noqa: F401
+from .snapshot import Snapshot, SnapshotStore  # noqa: F401
+
+__all__ = [
+    "Query", "PendingQuery", "QueryQueue", "QueueFull",
+    "batched_pagerank", "batched_sssp", "batch_frontier_density",
+    "Snapshot", "SnapshotStore", "ServeMetrics",
+    "ServeConfig", "QueryResult", "GraphServeService",
+]

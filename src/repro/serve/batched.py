@@ -1,0 +1,144 @@
+"""Batched graph queries: K roots / personalization vectors in ONE edge-map
+pass per iteration.
+
+The paper's case for DBG is hot-vertex reuse; nothing amplifies that reuse
+like serving many concurrent queries over the same reordered graph.  Here the
+property plane is 2D end-to-end — ``(V, K)`` for K queries — so every
+iteration of every query rides a single fused edge map (``kernels.edge_map``
+gathers the tile/idx/frontier structure ONCE for all K lanes), routed through
+the same ``apps.engine`` primitives as the single-query apps, on any
+registered backend (flat oracle, ell, packed).
+
+Ragged batches are handled with per-query convergence masks: a query that
+converged at iteration t is frozen (PageRank) or has an empty frontier
+(SSSP), so it stops contributing updates while the rest of the batch runs on
+— the batched result for each lane equals the independent single-query run
+(min-relaxations bitwise, sums to fp association; tested).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..apps.engine import (DENSITY_THRESHOLD, edge_map_pull, edge_map_push)
+
+__all__ = ["batched_pagerank", "batched_sssp", "batch_frontier_density"]
+
+
+def batch_frontier_density(ga, frontier: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of (edge, lane) slots touched by a (V, K) frontier — the
+    batched analogue of ``engine.frontier_density`` (Ligra's pull/push
+    switch statistic, averaged over the K query lanes)."""
+    k = frontier.shape[1]
+    e = jnp.maximum(1, ga.out_deg.sum()) * k
+    return jnp.sum(jnp.where(frontier, ga.out_deg[:, None], 0)) / e
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def batched_pagerank(
+    ga,
+    personalization: jnp.ndarray,  # (V, K) teleport vectors, columns sum to 1
+    *,
+    damping: float = 0.85,
+    max_iters: int = 64,
+    tol: float = 1e-7,
+):
+    """K personalized-PageRank vectors in one fused pull per iteration.
+
+    Returns ``(ranks (V, K) float32, iters (K,) int32)``.  Per-query
+    semantics match a K=1 call exactly: lane k iterates until its OWN
+    L1 delta drops below ``tol`` (or ``max_iters``), then freezes while the
+    rest of the batch converges — a ragged batch loses nothing.  Dangling
+    mass teleports by the lane's personalization vector; a uniform column
+    (``1/V``) reproduces global ``apps.pagerank`` to fp association.
+    """
+    p = personalization.astype(jnp.float32)
+    v, k = p.shape
+    out_deg = jnp.maximum(1, ga.out_deg).astype(jnp.float32)
+    dangling = (ga.out_deg == 0).astype(jnp.float32)
+
+    def cond(state):
+        _, active, it, _ = state
+        return jnp.logical_and(it < max_iters, jnp.any(active))
+
+    def body(state):
+        rank, active, it, iters = state
+        contrib = rank / out_deg[:, None]
+        pulled = edge_map_pull(ga, contrib, reduce="sum")  # ONE fused pass
+        dmass = jnp.sum(rank * dangling[:, None], axis=0)  # (K,)
+        new = (1.0 - damping) * p + damping * (pulled + dmass[None, :] * p)
+        err = jnp.sum(jnp.abs(new - rank), axis=0)  # (K,) per-query L1 delta
+        rank = jnp.where(active[None, :], new, rank)  # frozen lanes hold
+        iters = jnp.where(active, it + 1, iters)
+        active = jnp.logical_and(active, err > tol)
+        return rank, active, it + 1, iters
+
+    rank0 = p  # start at the teleport distribution (K=1 uniform == pagerank)
+    active0 = jnp.ones((k,), bool)
+    rank, _, _, iters = jax.lax.while_loop(
+        cond, body, (rank0, active0, 0, jnp.zeros((k,), jnp.int32)))
+    return rank, iters
+
+
+@partial(jax.jit, static_argnames=("max_iters", "direction_optimizing"))
+def batched_sssp(
+    ga,
+    roots: jnp.ndarray,  # (K,) int32 source vertices
+    *,
+    max_iters: int = 0,
+    direction_optimizing: bool = True,
+):
+    """K SSSP roots in one fused edge map per iteration.
+
+    Returns ``(dist (V, K) float32, iters (K,) int32)``.  Frontier
+    Bellman-Ford with a per-query (V, K) frontier: a finished query's lane
+    is empty, so it contributes only the min-identity and stops doing work.
+    Min-relaxation is exactly associative, so each lane is BIT-identical to
+    the independent ``apps.sssp`` run whatever direction the batch takes —
+    the pull/push switch (on the batch-mean frontier density) is purely a
+    traffic choice.  On an unweighted graph this is K-source BFS levels
+    (the landmark-BC forward sweep).
+    """
+    v = ga.in_deg.shape[0]
+    k = roots.shape[0]
+    max_iters = max_iters or v  # Bellman-Ford bound
+
+    lanes = jnp.arange(k)
+    dist0 = jnp.full((v, k), jnp.inf, jnp.float32).at[roots, lanes].set(0.0)
+    frontier0 = jnp.zeros((v, k), bool).at[roots, lanes].set(True)
+
+    def push_step(args):
+        dist, frontier = args
+        return edge_map_push(
+            ga, dist, reduce="min", src_frontier=frontier,
+            use_weights=True, neutral=jnp.inf, init=dist)
+
+    def pull_step(args):
+        dist, frontier = args
+        pulled = edge_map_pull(
+            ga, dist, reduce="min", src_frontier=frontier,
+            use_weights=True, neutral=jnp.inf)
+        return jnp.minimum(dist, pulled)
+
+    def cond(state):
+        _, frontier, it, _ = state
+        return jnp.logical_and(it < max_iters, jnp.any(frontier))
+
+    def body(state):
+        dist, frontier, it, iters = state
+        if direction_optimizing:
+            cand = jax.lax.cond(
+                batch_frontier_density(ga, frontier) > DENSITY_THRESHOLD,
+                pull_step, push_step, (dist, frontier))
+        else:
+            cand = push_step((dist, frontier))
+        iters = jnp.where(jnp.any(frontier, axis=0), it + 1, iters)
+        frontier = cand < dist
+        return cand, frontier, it + 1, iters
+
+    dist, _, _, iters = jax.lax.while_loop(
+        cond, body, (dist0, frontier0, 0, jnp.zeros((k,), jnp.int32)))
+    return dist, iters

@@ -1,48 +1,19 @@
-"""Batched serving: prefill + greedy decode loop with explicit caches."""
+"""Deprecated shim: the LM decode loop moved to ``repro.lm.serve``.
+
+``repro.serve`` now hosts the graph-query serving plane (batched apps,
+admission queue, snapshot store, service).  Import ``generate`` from
+``repro.lm.serve`` instead; this module forwards with a warning and will be
+removed once downstream callers migrate.
+"""
 from __future__ import annotations
 
-from typing import Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
+from ..lm.serve import generate  # noqa: F401
 
-from ..configs.base import ArchConfig
-from ..lm import model as model_mod
+warnings.warn(
+    "repro.serve.engine moved to repro.lm.serve; "
+    "import generate from repro.lm.serve",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["generate"]
-
-
-def generate(
-    params,
-    cfg: ArchConfig,
-    prompt: jnp.ndarray,  # (B, S_prompt) int32
-    max_new: int = 16,
-    max_len: Optional[int] = None,
-    cache_dtype=jnp.float32,
-):
-    """Greedy generation.  Prefill is performed token-by-token through the
-    decode path (identical math to full forward — tested); production prefill
-    uses the full-sequence forward with cache writeback."""
-    b, sp = prompt.shape
-    max_len = max_len or (sp + max_new + 1)
-    cache = model_mod.init_cache(cfg, b, max_len=max_len, dtype=cache_dtype)
-    step = jax.jit(
-        lambda p, c, t: model_mod.decode_step(p, cfg, c, t),
-        donate_argnums=(1,),
-    )
-
-    def pick(lg):
-        # mask the padded-vocab tail (Megatron-style padding; embed.py)
-        lg = lg[:, -1:, : cfg.vocab_size]
-        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-
-    logits = None
-    for t in range(sp):
-        logits, cache = step(params, cache, prompt[:, t : t + 1])
-    out = [prompt]
-    tok = pick(logits)
-    for _ in range(max_new):
-        out.append(tok)
-        logits, cache = step(params, cache, tok)
-        tok = pick(logits)
-    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,72 @@
+"""Serving observability: per-query latency, per-batch occupancy, quantiles.
+
+Counters only — no clocks of its own.  The service reports each dispatched
+batch (``record_batch``) with the per-query queue latencies and end-to-end
+latencies it measured; this module keeps the running aggregates the QPS
+benchmark and the README table read out: completed/cancelled/rejected
+counts, mean batch occupancy (lanes used / max width — the coalescing win),
+and latency quantiles (p50/p99).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+__all__ = ["ServeMetrics"]
+
+
+class ServeMetrics:
+    def __init__(self, max_width: int):
+        self.max_width = int(max_width)
+        self.batches = 0
+        self.completed = 0
+        self.lanes_used = 0
+        self.by_kind: Dict[str, int] = {}
+        self._latency: List[float] = []  # submit -> result, per query (s)
+        self._queue_wait: List[float] = []  # submit -> dispatch, per query (s)
+        self._batch_time: List[float] = []  # dispatch -> done, per batch (s)
+
+    def record_batch(self, kind: str, width: int, batch_seconds: float,
+                     latencies: Sequence[float],
+                     queue_waits: Sequence[float]) -> None:
+        self.batches += 1
+        self.completed += width
+        self.lanes_used += width
+        self.by_kind[kind] = self.by_kind.get(kind, 0) + width
+        self._batch_time.append(float(batch_seconds))
+        self._latency.extend(float(t) for t in latencies)
+        self._queue_wait.extend(float(t) for t in queue_waits)
+
+    # -- aggregates ---------------------------------------------------------
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of the batch width actually filled."""
+        if self.batches == 0:
+            return 0.0
+        return self.lanes_used / (self.batches * self.max_width)
+
+    def latency_quantiles(self, qs=(0.5, 0.99)) -> Dict[str, float]:
+        if not self._latency:
+            return {f"p{int(q * 100)}": float("nan") for q in qs}
+        arr = np.asarray(self._latency)
+        return {f"p{int(q * 100)}": float(np.quantile(arr, q)) for q in qs}
+
+    def summary(self) -> Dict[str, float]:
+        out = {
+            "batches": self.batches,
+            "completed": self.completed,
+            "occupancy": round(self.occupancy, 4),
+        }
+        q = self.latency_quantiles()
+        out["latency_p50_ms"] = round(q["p50"] * 1e3, 3)
+        out["latency_p99_ms"] = round(q["p99"] * 1e3, 3)
+        if self._queue_wait:
+            out["queue_wait_p50_ms"] = round(
+                float(np.quantile(np.asarray(self._queue_wait), 0.5)) * 1e3, 3)
+        if self._batch_time:
+            out["batch_ms_mean"] = round(
+                float(np.mean(self._batch_time)) * 1e3, 3)
+        for kind, n in sorted(self.by_kind.items()):
+            out[f"queries_{kind}"] = n
+        return out

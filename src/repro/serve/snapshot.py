@@ -1,0 +1,112 @@
+"""Snapshot isolation for serving over a churning graph.
+
+``stream.DeltaGraph`` mutates in place — base CSR + delta layers change under
+``ingest`` and fold entirely on ``compact``.  A query batch that takes many
+edge-map iterations must NOT see those mutations mid-flight, or lane results
+can mix two graph states (a half-applied delta batch).  The fix is the
+classic double-buffered snapshot:
+
+  * ``publish(graph)`` installs an immutable materialized CSR as version N+1
+    while version N keeps serving — readers already pinned to N are
+    untouched;
+  * ``acquire()`` pins the CURRENT version (refcount++) and returns it; the
+    batch runs every iteration against that one immutable graph;
+  * ``release(snap)`` unpins; a superseded version is reclaimed (its cached
+    backend state dropped) when its last reader releases — epoch-based
+    reclamation, no reader ever observes a freed snapshot.
+
+Versions are the observable epochs: each query result is stamped with the
+snapshot version it was answered against, so isolation is testable from the
+outside (a result computed "against version N" must equal a from-scratch run
+on the version-N graph, no matter how much ingest happened meanwhile).
+
+Backends built from a snapshot (ell tiles, packed layouts) are cached ON the
+snapshot — build once per published version, reuse for every batch pinned to
+it, drop with the snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from ..graph import csr
+
+__all__ = ["Snapshot", "SnapshotStore"]
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """One immutable published graph version plus its reader refcount."""
+
+    version: int
+    graph: csr.Graph
+    refs: int = 0
+    retired: bool = False  # superseded; reclaim when refs hits 0
+    _cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def cached(self, key: str, build: Callable[[csr.Graph], Any]) -> Any:
+        """Per-snapshot memo for derived state (backend arrays, tiles)."""
+        if key not in self._cache:
+            self._cache[key] = build(self.graph)
+        return self._cache[key]
+
+
+class SnapshotStore:
+    """Double-buffered, refcounted snapshot versions with epoch reclaim."""
+
+    def __init__(self, graph: Optional[csr.Graph] = None):
+        self._versions: Dict[int, Snapshot] = {}
+        self._current: Optional[Snapshot] = None
+        self._next_version = 0
+        self.published = 0
+        self.reclaimed = 0
+        if graph is not None:
+            self.publish(graph)
+
+    # -- writer side --------------------------------------------------------
+    def publish(self, graph: csr.Graph) -> Snapshot:
+        """Install ``graph`` as the new current version.  The previous
+        version keeps serving its pinned readers and is reclaimed when the
+        last of them releases (immediately, if it had none)."""
+        snap = Snapshot(version=self._next_version, graph=graph)
+        self._next_version += 1
+        prev, self._current = self._current, snap
+        self._versions[snap.version] = snap
+        self.published += 1
+        if prev is not None:
+            prev.retired = True
+            self._maybe_reclaim(prev)
+        return snap
+
+    # -- reader side --------------------------------------------------------
+    @property
+    def current_version(self) -> int:
+        if self._current is None:
+            raise RuntimeError("no snapshot published yet")
+        return self._current.version
+
+    def acquire(self) -> Snapshot:
+        """Pin the current version; every iteration of the caller's batch
+        runs against this one immutable graph."""
+        if self._current is None:
+            raise RuntimeError("no snapshot published yet")
+        self._current.refs += 1
+        return self._current
+
+    def release(self, snap: Snapshot) -> None:
+        if snap.refs <= 0:
+            raise RuntimeError(
+                f"release of unpinned snapshot v{snap.version}")
+        snap.refs -= 1
+        self._maybe_reclaim(snap)
+
+    # -- reclaim ------------------------------------------------------------
+    def _maybe_reclaim(self, snap: Snapshot) -> None:
+        if snap.retired and snap.refs == 0:
+            self._versions.pop(snap.version, None)
+            snap._cache.clear()  # drop cached backend state with the epoch
+            self.reclaimed += 1
+
+    @property
+    def live_versions(self) -> int:
+        return len(self._versions)

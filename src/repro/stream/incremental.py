@@ -48,6 +48,7 @@ __all__ = [
     "edge_map_push_stream",
     "stream_push_tiles",
     "edge_map_push_stream_fused",
+    "edge_map_pull_stream_fused",
     "IncrementalPageRank",
     "IncrementalSSSP",
 ]
@@ -316,6 +317,36 @@ def edge_map_push_stream_fused(
         row_tile=row_tile, width_tile=width_tile, interpret=interpret)
 
 
+def edge_map_pull_stream_fused(
+    base_tiles,
+    delta_tiles,
+    prop: jnp.ndarray,
+    num_vertices: int,
+    *,
+    reduce: str = "sum",
+    src_frontier: Optional[jnp.ndarray] = None,
+    use_weights: bool = False,
+    row_tile: int = 64,
+    width_tile: int = 128,
+    interpret: bool = True,
+):
+    """Fused-kernel twin of :func:`edge_map_pull_stream`.
+
+    The in-direction tiles ``stream_push_tiles`` maintains (push here is the
+    transposed pull, so the ONE tile set serves both) run in pull mode —
+    ``init=None``, every dst row reduced over its current in-edges, base +
+    delta in the same kernel family — replacing the O(E_base) segment reduce
+    + O(D) scatter of the edge-parallel pull."""
+    from ..kernels.edge_map.ops import fused_edge_map
+
+    red = "max" if reduce == "or" else reduce
+    return fused_edge_map(
+        base_tiles, prop, num_vertices,
+        reduce=red, src_frontier=src_frontier, use_weights=use_weights,
+        neutral=reduce_identity(reduce), init=None, extra_tiles=delta_tiles,
+        row_tile=row_tile, width_tile=width_tile, interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("max_iters", "row_tile", "width_tile"))
 def _sssp_converge_fused(base_tiles, delta_tiles, dist, frontier,
                          max_iters: int, row_tile: int = 64,
@@ -350,6 +381,22 @@ def _pr_residual(sa: StreamArrays, rank: jnp.ndarray, damping: jnp.ndarray):
     odeg = jnp.maximum(1, sa.out_deg).astype(jnp.float32)
     contrib = jnp.where(dangling, 0.0, rank / odeg)
     pulled = edge_map_pull_stream(sa, contrib, reduce="sum")
+    dmass = jnp.sum(jnp.where(dangling, rank, 0.0)) / v
+    return (1.0 - damping) / v + damping * (pulled + dmass) - rank
+
+
+@jax.jit
+def _pr_residual_fused(base_tiles, delta_tiles, out_deg, rank, damping):
+    """:func:`_pr_residual` with the full pull on the fused base+delta tiles
+    (the same in-direction tile set the push loop rides) — the resync after
+    compaction was the last edge-parallel pass left under
+    ``use_fused_push=True``."""
+    v = rank.shape[0]
+    dangling = out_deg == 0
+    odeg = jnp.maximum(1, out_deg).astype(jnp.float32)
+    contrib = jnp.where(dangling, 0.0, rank / odeg)
+    pulled = edge_map_pull_stream_fused(base_tiles, delta_tiles, contrib, v,
+                                        reduce="sum")
     dmass = jnp.sum(jnp.where(dangling, rank, 0.0)) / v
     return (1.0 - damping) / v + damping * (pulled + dmass) - rank
 
@@ -502,9 +549,19 @@ class IncrementalPageRank:
             return 0
         sa = stream_arrays(self.dg)
         if self._needs_full_residual:
-            self._residual = np.asarray(
-                _pr_residual(sa, jnp.asarray(self.rank),
-                             jnp.float32(self.damping)))
+            if self.use_fused_push:
+                # resync rides the SAME fused base+delta tiles as the push
+                # loop (cached on the DeltaGraph) instead of dropping back
+                # to the edge-parallel segment reduce
+                base_tiles, delta_tiles = stream_push_tiles(self.dg)
+                self._residual = np.asarray(
+                    _pr_residual_fused(base_tiles, delta_tiles, sa.out_deg,
+                                       jnp.asarray(self.rank),
+                                       jnp.float32(self.damping)))
+            else:
+                self._residual = np.asarray(
+                    _pr_residual(sa, jnp.asarray(self.rank),
+                                 jnp.float32(self.damping)))
             self._needs_full_residual = False
             self._res_uniform = 0.0
         elif self._res_uniform:

@@ -1,0 +1,54 @@
+"""LM serving-path tests: greedy generation determinism + finiteness.
+
+(Moved with the decode scaffold from ``repro.serve.engine`` to
+``repro.lm.serve``; ``tests/test_serve.py`` now covers the graph-query
+serving plane.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.lm import model as model_mod
+from repro.lm.serve import generate
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "mamba2_780m"])
+def test_generate_shapes_and_determinism(arch):
+    cfg = reduced(get_config(arch), remat=False)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    out1 = generate(params, cfg, prompt, max_new=6)
+    out2 = generate(params, cfg, prompt, max_new=6)
+    assert out1.shape == (2, 14)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.max()) < cfg.vocab_size and int(out1.min()) >= 0
+    # prompt preserved
+    np.testing.assert_array_equal(np.asarray(out1[:, :8]), np.asarray(prompt))
+
+
+def test_generate_greedy_matches_forward_argmax():
+    """First generated token == argmax of the full-forward last logits."""
+    cfg = reduced(get_config("yi_9b"), remat=False)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    logits, _ = model_mod.forward(params, cfg, prompt)
+    expect = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+    out = generate(params, cfg, prompt, max_new=1)
+    np.testing.assert_array_equal(np.asarray(out[:, 8]), np.asarray(expect))
+
+
+def test_deprecated_engine_shim_still_exports_generate():
+    import importlib
+    import warnings
+
+    import repro.serve.engine as shim
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        importlib.reload(shim)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert shim.generate is generate

@@ -1,37 +1,304 @@
-"""Serving-path tests: greedy generation determinism + finiteness."""
-import jax
+"""repro.serve tests: batched queries == independent runs, admission queue
+semantics, snapshot isolation under churning ingest.
+
+The batching contract (hypothesis property): a K-lane batched PageRank/SSSP
+answers every lane exactly as the independent single-query run would — min
+relaxations bitwise, sums to fp association — on every registered edge-map
+backend, weighted or not, including ragged batches where lanes converge at
+different iterations.
+
+The isolation contract (e2e): a query batch pinned to snapshot version N
+computes against EXACTLY the version-N graph, no matter how many delta
+batches ``ingest`` applies meanwhile — never a half-applied batch.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
-from repro.configs import get_config
-from repro.configs.base import reduced
-from repro.lm import model as model_mod
-from repro.serve.engine import generate
+from repro.apps import pagerank, sssp, to_arrays
+from repro.graph import csr, datasets
+from repro.serve import (GraphServeService, Query, QueryQueue, QueueFull,
+                         ServeConfig, ServeMetrics, SnapshotStore,
+                         batched_pagerank, batched_sssp)
 
-
-@pytest.mark.parametrize("arch", ["olmo_1b", "mamba2_780m"])
-def test_generate_shapes_and_determinism(arch):
-    cfg = reduced(get_config(arch), remat=False)
-    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
-                                cfg.vocab_size, dtype=jnp.int32)
-    out1 = generate(params, cfg, prompt, max_new=6)
-    out2 = generate(params, cfg, prompt, max_new=6)
-    assert out1.shape == (2, 14)
-    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
-    assert int(out1.max()) < cfg.vocab_size and int(out1.min()) >= 0
-    # prompt preserved
-    np.testing.assert_array_equal(np.asarray(out1[:, :8]), np.asarray(prompt))
+BACKENDS = ("flat", "ell", "packed")
 
 
-def test_generate_greedy_matches_forward_argmax():
-    """First generated token == argmax of the full-forward last logits."""
-    cfg = reduced(get_config("yi_9b"), remat=False)
-    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
-    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
-                                cfg.vocab_size, dtype=jnp.int32)
-    logits, _ = model_mod.forward(params, cfg, prompt)
-    expect = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
-    out = generate(params, cfg, prompt, max_new=1)
-    np.testing.assert_array_equal(np.asarray(out[:, 8]), np.asarray(expect))
+def _rand_graph(n, e, seed, weighted):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    w = rng.random(e).astype(np.float32) + 0.01 if weighted else None
+    return csr.from_edges(src, dst, n, weights=w)
+
+
+# ---------------------------------------------------------------------------
+# batched == independent (the satellite hypothesis property)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _batch_case(draw):
+    n = draw(st.integers(12, 64))
+    e = draw(st.integers(1, 6)) * n
+    seed = draw(st.integers(0, 5_000))
+    weighted = draw(st.integers(0, 1)) == 1
+    backend = draw(st.sampled_from(BACKENDS))
+    k = draw(st.integers(1, 5))
+    return n, e, seed, weighted, backend, k
+
+
+@settings(max_examples=10, deadline=None)
+@given(_batch_case())
+def test_batched_equals_independent(case):
+    n, e, seed, weighted, backend, k = case
+    g = _rand_graph(n, e, seed, weighted)
+    ga = to_arrays(g, backend=backend)
+    rng = np.random.default_rng(seed + 1)
+    roots = rng.integers(0, n, k)
+
+    # SSSP: every lane bitwise == the independent single-root run, and the
+    # per-lane iteration counts prove ragged convergence is handled
+    dist, iters = batched_sssp(ga, jnp.asarray(roots, jnp.int32))
+    for i, r in enumerate(roots):
+        d1, it1 = sssp(ga, int(r))
+        np.testing.assert_array_equal(np.asarray(dist[:, i]),
+                                      np.asarray(d1))
+        assert int(iters[i]) == int(it1)
+
+    # PageRank: lane i of a K-wide batch == the same teleport run at K=1
+    p = np.zeros((n, k), np.float32)
+    for i, r in enumerate(roots):
+        if i % 2 == 0:
+            p[:, i] = 1.0 / n  # uniform lane (global PR)
+        else:
+            p[r, i] = 1.0  # one-hot lane (personalized PR)
+    ranks, prit = batched_pagerank(ga, jnp.asarray(p), max_iters=32)
+    for i in range(k):
+        r1, it1 = batched_pagerank(ga, jnp.asarray(p[:, i : i + 1]),
+                                   max_iters=32)
+        np.testing.assert_allclose(np.asarray(ranks[:, i]),
+                                   np.asarray(r1[:, 0]), atol=1e-6)
+        # sum reductions are fp-associative, so a lane whose L1 delta lands
+        # within float noise of tol may cross it one iteration apart
+        assert abs(int(prit[i]) - int(it1[0])) <= 1
+
+
+def test_batched_uniform_lane_matches_global_pagerank():
+    g = datasets.load("kr", "test")
+    ga = to_arrays(g)
+    v = g.num_vertices
+    p = np.full((v, 3), 1.0 / v, np.float32)
+    p[:, 1] = 0.0
+    p[7, 1] = 1.0  # a personalized lane in the middle of uniform ones
+    ranks, _ = batched_pagerank(ga, jnp.asarray(p), max_iters=64)
+    ref, _ = pagerank(ga, max_iters=64)
+    np.testing.assert_allclose(np.asarray(ranks[:, 0]), np.asarray(ref),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ranks[:, 2]), np.asarray(ref),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# admission queue
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_queue_backpressure_and_cancel():
+    q = QueryQueue(max_width=2, max_depth=2)
+    a = q.submit(Query("pagerank"))
+    q.submit(Query("pagerank"))
+    with pytest.raises(QueueFull):
+        q.submit(Query("pagerank"))
+    assert q.rejected == 1
+    assert q.cancel(a) and not q.cancel(a)  # second cancel is a no-op
+    q.submit(Query("sssp", root=0))  # cancelled slot freed capacity
+    assert len(q) == 2
+
+
+def test_queue_priority_then_fifo_one_kind_per_batch():
+    q = QueryQueue(max_width=3, max_depth=16)
+    q.submit(Query("sssp", root=1))
+    q.submit(Query("pagerank", priority=9))
+    q.submit(Query("sssp", root=2, priority=5))
+    q.submit(Query("sssp", root=3))
+    batch = q.next_batch(now=float("inf"))
+    # highest-priority query picks the kind; batch is one kind only
+    assert [p.query.kind for p in batch] == ["pagerank"]
+    batch = q.next_batch(now=float("inf"))
+    assert [p.query.root for p in batch] == [2, 1, 3]  # priority, then FIFO
+
+
+def test_queue_deadline_dispatch():
+    clock = FakeClock()
+    q = QueryQueue(max_width=4, max_depth=16, deadline=1.0, clock=clock)
+    q.submit(Query("pagerank"))
+    assert q.next_batch() == []  # partial batch, deadline not reached
+    clock.t = 2.0
+    assert len(q.next_batch()) == 1  # oldest query aged out the deadline
+    # a FULL batch dispatches immediately, deadline notwithstanding
+    for _ in range(4):
+        q.submit(Query("pagerank"))
+    assert len(q.next_batch()) == 4
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        Query("sssp")  # missing root
+    with pytest.raises(ValueError):
+        Query("triangle_count")
+    with pytest.raises(ValueError):
+        QueryQueue(max_width=0)
+
+
+def test_query_epochs_are_monotone():
+    q = QueryQueue(max_width=8, max_depth=8)
+    epochs = [q.submit(Query("pagerank")) for _ in range(3)]
+    batch = q.next_batch(now=float("inf"))
+    assert [p.submit_epoch for p in batch] == epochs == sorted(epochs)
+
+
+# ---------------------------------------------------------------------------
+# snapshot store
+# ---------------------------------------------------------------------------
+
+def test_snapshot_store_refcount_and_epoch_reclaim():
+    g = _rand_graph(16, 32, 0, False)
+    g2 = _rand_graph(16, 40, 1, False)
+    store = SnapshotStore(g)
+    s0 = store.acquire()
+    assert s0.version == 0 and store.live_versions == 1
+    store.publish(g2)  # supersede while s0 is pinned
+    assert store.current_version == 1
+    assert store.live_versions == 2  # s0 survives: a reader still holds it
+    assert s0.graph is g  # the pinned snapshot never mutates
+    s1 = store.acquire()
+    assert s1.version == 1
+    store.release(s0)  # last reader of the retired epoch
+    assert store.live_versions == 1 and store.reclaimed == 1
+    store.release(s1)
+    assert store.live_versions == 1  # current version is never reclaimed
+    with pytest.raises(RuntimeError):
+        store.release(s1)  # double release
+
+
+def test_snapshot_cached_builds_once():
+    store = SnapshotStore(_rand_graph(16, 32, 0, False))
+    snap = store.acquire()
+    calls = []
+    b1 = snap.cached("k", lambda g: calls.append(1) or object())
+    b2 = snap.cached("k", lambda g: calls.append(1) or object())
+    assert b1 is b2 and len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_occupancy_and_quantiles():
+    m = ServeMetrics(max_width=4)
+    m.record_batch("pagerank", 4, 0.1, [0.1] * 4, [0.0] * 4)
+    m.record_batch("sssp", 2, 0.2, [0.2, 0.4], [0.0, 0.0])
+    assert m.batches == 2 and m.completed == 6
+    assert m.occupancy == pytest.approx(6 / 8)
+    s = m.summary()
+    assert s["queries_pagerank"] == 4 and s["queries_sssp"] == 2
+    assert s["latency_p50_ms"] == pytest.approx(100.0)
+    assert s["latency_p99_ms"] > s["latency_p50_ms"]
+
+
+# ---------------------------------------------------------------------------
+# service end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return datasets.load("kr", "test")
+
+
+def test_service_batch_matches_single_apps(small_graph):
+    svc = GraphServeService(small_graph,
+                            ServeConfig(max_width=4, backend="flat"))
+    for _ in range(2):
+        svc.submit(Query("pagerank"))
+    qid_s1 = svc.submit(Query("sssp", root=1))
+    svc.submit(Query("sssp", root=7))
+    results = svc.drain()
+    assert len(results) == 4
+    ga = to_arrays(small_graph)
+    ref_pr, it_pr = pagerank(ga, max_iters=64, tol=1e-7)
+    ref_d1, it_d1 = sssp(ga, 1)
+    by_kind = {}
+    for r in results:
+        by_kind.setdefault(r.kind, []).append(r)
+    np.testing.assert_allclose(by_kind["pagerank"][0].value,
+                               np.asarray(ref_pr), atol=1e-6)
+    assert by_kind["pagerank"][0].iters == int(it_pr)
+    d1 = next(r for r in by_kind["sssp"] if r.qid == qid_s1)
+    assert d1.iters == int(it_d1)
+    np.testing.assert_array_equal(d1.value, np.asarray(ref_d1))
+    assert all(r.snapshot_version == 0 for r in results)
+    assert svc.metrics.completed == 4 and svc.metrics.batches == 2
+
+
+def test_service_snapshot_isolation_under_churn(small_graph):
+    """Queries never observe a half-applied delta batch: a batch pinned to
+    version N equals the from-scratch answer on the version-N graph, however
+    much ingest lands between submit and dispatch."""
+    rng = np.random.default_rng(0)
+    v = small_graph.num_vertices
+    svc = GraphServeService(small_graph,
+                            ServeConfig(max_width=2, publish_every=1))
+    version_graphs = {0: svc.store.acquire()}  # pin every published version
+    answered = []
+    for step in range(4):
+        svc.submit(Query("sssp", root=int(rng.integers(0, v))))
+        svc.submit(Query("pagerank"))
+        # churn lands BETWEEN submit and dispatch; publishes version step+1
+        svc.ingest(add_src=rng.integers(0, v, 64),
+                   add_dst=rng.integers(0, v, 64))
+        version_graphs[svc.snapshot_version] = svc.store.acquire()
+        answered.extend(svc.drain())
+    assert {r.snapshot_version for r in answered} == {1, 2, 3, 4}
+    for r in answered:
+        ga = to_arrays(version_graphs[r.snapshot_version].graph)
+        if r.kind == "sssp":
+            root = int(np.flatnonzero(r.value == 0.0)[0])
+            ref, _ = sssp(ga, root)
+            np.testing.assert_array_equal(r.value, np.asarray(ref))
+        else:
+            ref, _ = pagerank(ga, max_iters=64, tol=1e-7)
+            np.testing.assert_allclose(r.value, np.asarray(ref), atol=1e-6)
+    # epoch reclaim: releasing the old pins leaves only the current version
+    for snap in version_graphs.values():
+        svc.store.release(snap)
+    assert svc.store.live_versions == 1
+
+
+def test_service_backpressure_and_cancellation(small_graph):
+    svc = GraphServeService(small_graph,
+                            ServeConfig(max_width=2, max_depth=2))
+    a = svc.submit(Query("pagerank"))
+    svc.submit(Query("pagerank"))
+    with pytest.raises(QueueFull):
+        svc.submit(Query("pagerank"))
+    assert svc.cancel(a)
+    results = svc.drain()
+    assert len(results) == 1  # the cancelled query was never dispatched
+    assert all(r.qid != a for r in results)
+
+
+def test_deadline_zero_dispatches_partial_batches(small_graph):
+    svc = GraphServeService(small_graph,
+                            ServeConfig(max_width=8, deadline=0.0))
+    svc.submit(Query("sssp", root=0))
+    res = svc.pump()  # deadline 0: whatever is waiting goes immediately
+    assert len(res) == 1
+    assert svc.metrics.occupancy == pytest.approx(1 / 8)
