@@ -47,6 +47,7 @@ from repro.core import reorder
 from repro.graph import csr as csr_mod
 from repro.graph import datasets
 from repro.kernels.edge_map.ops import fused_edge_map_bytes
+from repro.obs.counters import flat_edge_map_bytes
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from common import time_jitted  # noqa: E402
@@ -62,20 +63,10 @@ def _xla_bytes(fn, *args) -> float:
     return float(cost.get("bytes accessed", 0.0))
 
 
-def _flat_model_bytes(e: int, v: int, *, weighted: bool, frontier: bool,
-                      push_init: bool) -> int:
-    """Analytic pass model of the flat edge map (documented cross-check):
-    idx read + property gather + edge-value materialize per pass, then the
-    segment/scatter pass re-reads values + owner ids and writes (V,)."""
-    b = e * 4 + e * 4 + e * 4          # gather: in_src, prop[e], vals write
-    if weighted:
-        b += e * 4 + 2 * e * 4         # w plane read + vals rmw
-    if frontier:
-        b += e * 1 + 2 * e * 4         # frontier gather + vals rmw
-    b += e * 4 + e * 4 + v * 4         # reduce: vals, owner ids, out write
-    if push_init:
-        b += v * 4                     # init read
-    return b
+# analytic pass model of the flat edge map — now the shared cost model the
+# observability counters charge per pass (repro.obs.counters); identical to
+# the former local _flat_model_bytes at plane_k=1
+_flat_model_bytes = flat_edge_map_bytes
 
 
 def _agree(a, b) -> float:

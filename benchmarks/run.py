@@ -1,27 +1,47 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
 import json
-import sys
 
 from . import beyond_paper, lm_benches, paper_figures, paper_tables, serve_qps
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on bench function names")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome trace of the run (one span per "
+                         "bench on top of the library's own spans) and save "
+                         "it here — load in Perfetto / chrome://tracing")
+    args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()
+    else:
+        obs_trace = None
+
     benches = (paper_tables.BENCHES + paper_figures.BENCHES
                + lm_benches.BENCHES + beyond_paper.BENCHES
                + serve_qps.BENCHES)
     print("name,us_per_call,derived")
     failures = 0
     for fn in benches:
-        if only and only not in fn.__name__:
+        if args.only and args.only not in fn.__name__:
             continue
         try:
-            us, derived = fn()
+            if obs_trace is not None:
+                with obs_trace.span(f"bench.{fn.__name__}", cat="bench"):
+                    us, derived = fn()
+            else:
+                us, derived = fn()
             print(f"{fn.__name__},{us:.0f},"
                   f"\"{json.dumps(derived, default=str)[:600]}\"", flush=True)
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{fn.__name__},-1,\"ERROR: {e}\"", flush=True)
+    if args.trace:
+        print(f"# trace -> {obs_trace.save(args.trace)}", flush=True)
     if failures:
         raise SystemExit(1)
 

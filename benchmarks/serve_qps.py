@@ -39,6 +39,9 @@ import numpy as np
 
 from repro.apps import to_arrays
 from repro.graph import datasets
+from repro.obs import counters as obs_counters
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
 from repro.serve import (GraphServeService, Query, ServeConfig, batched_sssp)
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
@@ -50,7 +53,12 @@ def bench_width(g, k: int, *, queries: int, churn: int, backend: str,
     """(QPS, latency, occupancy) for batch width K over the churn stream."""
     v = g.num_vertices
     results, pins, elapsed = [], {}, 0.0
+    counters = None
     for timed in (False, True):  # identical passes; first absorbs compiles
+        if timed:
+            # per-cell edge-map telemetry: fresh registry so the counter
+            # columns cover exactly the timed pass
+            counters = obs_counters.install(registry=MetricsRegistry())
         svc = GraphServeService(g, ServeConfig(
             max_width=k, max_depth=4 * k, backend=backend,
             pr_max_iters=15, publish_every=1))
@@ -84,6 +92,7 @@ def bench_width(g, k: int, *, queries: int, churn: int, backend: str,
         for snap in pins.values():
             svc.store.release(snap)
         summary = svc.metrics.summary()
+        obs_counters.uninstall()
     return {
         "width": k,
         "qps": round(len(results) / elapsed, 3),
@@ -93,6 +102,8 @@ def bench_width(g, k: int, *, queries: int, churn: int, backend: str,
         "batches": summary["batches"],
         "ingest_batches": burst,
         "isolation_checked": True,
+        # per-pass edge-map telemetry of the timed pass (repro.obs.counters)
+        "counters": counters.summary(),
     }
 
 
@@ -126,6 +137,9 @@ def main() -> None:
     ap.add_argument("--backend", default="flat")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: test scale, widths 1,4, 8 queries")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome trace (serve/stream/engine spans) "
+                         "and save it here — load in Perfetto")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_serve.json"))
@@ -134,14 +148,17 @@ def main() -> None:
         args.scale, args.widths = "test", "1,4"
         args.queries, args.churn = 8, 32
     widths = [int(w) for w in args.widths.split(",")]
+    if args.trace:
+        obs_trace.enable()
 
     g = datasets.load(args.dataset, args.scale, seed=0)
     out = {"dataset": args.dataset, "scale": args.scale,
            "backend": args.backend, "queries_per_cell": args.queries,
            "churn_batch": args.churn, "cells": []}
     for k in widths:
-        cell = bench_width(g, k, queries=args.queries, churn=args.churn,
-                           backend=args.backend)
+        with obs_trace.span("bench.serve_width", cat="bench", width=k):
+            cell = bench_width(g, k, queries=args.queries, churn=args.churn,
+                               backend=args.backend)
         out["cells"].append(cell)
         print(f"[serve_qps] K={k}: {cell['qps']:.2f} qps, p50 "
               f"{cell['latency_p50_ms']:.1f} ms, p99 "
@@ -158,6 +175,9 @@ def main() -> None:
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
+    if args.trace:
+        print(f"[serve_qps] trace -> {obs_trace.save(args.trace)}",
+              flush=True)
     print(f"[serve_qps] wrote {args.out} (qps_increases_with_width="
           f"{out['summary']['qps_increases_with_width']}, widest/serial="
           f"{out['summary']['widest_over_serial_qps']}x)", flush=True)

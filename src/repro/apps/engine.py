@@ -40,6 +40,7 @@ import numpy as np
 
 from ..graph import csr
 from ..kernels.edge_map.edge_map import reduce_identity
+from ..obs import trace as obs_trace
 
 __all__ = [
     "GraphArrays",
@@ -52,6 +53,8 @@ __all__ = [
     "edge_map_pull",
     "edge_map_push",
     "out_edge_sum",
+    "set_edge_map_hook",
+    "get_edge_map_hook",
     "vertex_map",
     "frontier_density",
     "switch_by_density",
@@ -420,8 +423,36 @@ def to_arrays(
     kernels straight over the slot tables; ``"arrays"`` returns the raw
     ``GraphArrays`` (the dist/stream substrate).
     """
-    return resolve_backend(backend)(
-        g, row_tile=row_tile, width_tile=width_tile, interpret=interpret)
+    with obs_trace.span("engine.build_backend", cat="engine",
+                        backend=backend, vertices=g.num_vertices,
+                        edges=g.num_edges):
+        return resolve_backend(backend)(
+            g, row_tile=row_tile, width_tile=width_tile, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# instrumentation hook (repro.obs) — one table-stakes check per dispatch
+# ---------------------------------------------------------------------------
+
+#: When set (``repro.obs.counters.install()``), every ``edge_map_pull`` /
+#: ``edge_map_push`` / ``out_edge_sum`` dispatch calls
+#: ``hook.on_pass(ga, direction, prop, kw)`` BEFORE running — the hook must
+#: not touch operand values (instrumented runs stay bitwise identical; the
+#: obs test suite property-checks this on all three backends).  ``None``
+#: (the default) costs one ``is not None`` per dispatch.
+_EDGE_MAP_HOOK = None
+
+
+def set_edge_map_hook(hook):
+    """Install (or clear, with ``None``) the edge-map instrumentation hook.
+    Returns the previously installed hook."""
+    global _EDGE_MAP_HOOK
+    prev, _EDGE_MAP_HOOK = _EDGE_MAP_HOOK, hook
+    return prev
+
+
+def get_edge_map_hook():
+    return _EDGE_MAP_HOOK
 
 
 def edge_map_pull(ga, prop, **kw):
@@ -432,6 +463,8 @@ def edge_map_pull(ga, prop, **kw):
     sources (inactive sources contribute ``neutral``).  Dispatches to the
     backend; raw ``GraphArrays`` take the flat path.
     """
+    if _EDGE_MAP_HOOK is not None:
+        _EDGE_MAP_HOOK.on_pass(ga, "pull", prop, kw)
     if isinstance(ga, GraphArrays):
         return _pull_flat(ga, prop, **kw)
     return ga.pull(prop, **kw)
@@ -444,6 +477,8 @@ def edge_map_push(ga, prop, **kw):
     read-modify-write traffic; on the fused backend it is the transposed
     pull with an ``init``-seeded accumulator — no scatter at all.
     """
+    if _EDGE_MAP_HOOK is not None:
+        _EDGE_MAP_HOOK.on_pass(ga, "push", prop, kw)
     if isinstance(ga, GraphArrays):
         return _push_flat(ga, prop, **kw)
     return ga.push(prop, **kw)
@@ -457,6 +492,8 @@ def out_edge_sum(ga, edge_val) -> jnp.ndarray:
     parallel) storage provide their own ``out_edge_sum``; everything backed
     by flat arrays takes the edge-parallel segment sum here.
     """
+    if _EDGE_MAP_HOOK is not None:
+        _EDGE_MAP_HOOK.on_pass(ga, "out_sum", None, {})
     fn = getattr(ga, "out_edge_sum", None)
     if fn is not None:
         return fn(edge_val)

@@ -59,6 +59,7 @@ from jax.sharding import PartitionSpec as P
 from ..apps.engine import GraphArrays
 from ..apps import engine as apps_engine
 from ..core import reorder
+from ..obs import trace as obs_trace
 from ..kernels.edge_map.edge_map import (edge_map_tile_bytes,
                                          ell_edge_map_pallas,
                                          reduce_identity)
@@ -424,6 +425,10 @@ def edge_map_pull_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
     both backends; ``backend=None`` uses the layout's own.
     """
     backend = _resolve_backend(sg, backend)
+    hook = apps_engine.get_edge_map_hook()
+    if hook is not None:
+        hook.on_pass(sg, "pull", prop, {"reduce": reduce,
+                                        "use_weights": use_weights})
     red = "max" if reduce == "or" else reduce
     if neutral is None:
         # pad slots and empty rows take the identity of the REWRITTEN
@@ -465,8 +470,10 @@ def edge_map_pull_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
         fn = shard_map(ranked, mesh=mesh,
                        in_specs=(a, P(), a, a, a, a, a), out_specs=a,
                        check_rep=False)
-        out = fn(prop_blocks, hot_tab, sg.send_idx, sg.in_slot,
-                 sg.in_dst_local, sg.in_w, sg.in_mask)
+        with obs_trace.span("dist.edge_map_pull", cat="dist",
+                            backend=backend, shards=d, reduce=reduce):
+            out = fn(prop_blocks, hot_tab, sg.send_idx, sg.in_slot,
+                     sg.in_dst_local, sg.in_w, sg.in_mask)
         return out.reshape(-1)[: sg.num_vertices]
 
     # fused per-shard DBG-ELL path: one kernel pass per width class over the
@@ -496,7 +503,9 @@ def edge_map_pull_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
     fn = shard_map(ranked_ell, mesh=mesh,
                    in_specs=(a, P(), a) + (a,) * len(tile_args), out_specs=a,
                    check_rep=False)
-    out = fn(prop_blocks, hot_tab, sg.send_idx, *tile_args)
+    with obs_trace.span("dist.edge_map_pull", cat="dist",
+                        backend=backend, shards=d, reduce=reduce):
+        out = fn(prop_blocks, hot_tab, sg.send_idx, *tile_args)
     return out.reshape(-1)[: sg.num_vertices]
 
 
@@ -513,6 +522,10 @@ def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
     pull over dst-grouped tiles — no scatter at all before the collective.
     """
     backend = _resolve_backend(sg, backend)
+    hook = apps_engine.get_edge_map_hook()
+    if hook is not None:
+        hook.on_pass(sg, "push", prop, {"reduce": reduce,
+                                        "use_weights": use_weights})
     v_blk = sg.v_blk
     v_pad = sg.v_pad
     d = sg.n_shards
@@ -553,8 +566,10 @@ def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
         a = P(AXIS)
         fn = shard_map(ranked, mesh=mesh, in_specs=(a, a, a, a, a),
                        out_specs=a, check_rep=False)
-        out = fn(prop_blocks, sg.out_src_local, sg.out_dst, sg.out_w,
-                 sg.out_mask)
+        with obs_trace.span("dist.edge_map_push", cat="dist",
+                            backend=backend, shards=d, reduce=reduce):
+            out = fn(prop_blocks, sg.out_src_local, sg.out_dst, sg.out_w,
+                     sg.out_mask)
     else:
         red = "max" if reduce == "or" else reduce
         identity = reduce_identity(red)  # masked lanes can never win a max
@@ -580,7 +595,9 @@ def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
         fn = shard_map(ranked_ell, mesh=mesh,
                        in_specs=(a,) + (a,) * len(tile_args), out_specs=a,
                        check_rep=False)
-        out = fn(prop_blocks, *tile_args)
+        with obs_trace.span("dist.edge_map_push", cat="dist",
+                            backend=backend, shards=d, reduce=reduce):
+            out = fn(prop_blocks, *tile_args)
 
     out = out.reshape(-1)[: sg.num_vertices]
     if init is not None:
@@ -846,5 +863,11 @@ def pagerank_sharded(sg: ShardedGraphArrays, mesh, *, damping: float = 0.85,
             return jax.lax.while_loop(cond, body, (rank0, 0, jnp.inf))
 
         _PR_CACHE[key] = jax.jit(run)
-    rank, iters, _ = _PR_CACHE[key]()
+    with obs_trace.span("dist.pagerank", cat="dist", backend=sg.backend,
+                        shards=sg.n_shards) as sp:
+        rank, iters, _ = jax.block_until_ready(_PR_CACHE[key]())
+        sp.add(iters=int(iters))
+    hook = apps_engine.get_edge_map_hook()
+    if hook is not None and hasattr(hook, "record_iters"):
+        hook.record_iters("pagerank_sharded", np.asarray([int(iters)]))
     return rank, iters

@@ -1,0 +1,43 @@
+"""repro.obs — unified tracing, metrics, and edge-map counter telemetry.
+
+The measurement plane the rest of the stack stands on:
+
+  * :mod:`repro.obs.trace`    — near-zero-overhead span tracer (context
+    manager + decorator, nested spans, monotone clocks, thread-safe, no-op
+    singleton when disabled) exporting Chrome-trace-event JSON that loads
+    straight into Perfetto / chrome://tracing;
+  * :mod:`repro.obs.metrics`  — counter / gauge / histogram registry with
+    bounded reservoir quantiles (what ``serve.ServeMetrics`` is built on);
+  * :mod:`repro.obs.counters` — per-edge-map-pass telemetry (edges
+    traversed, modeled HBM bytes, frontier density, per-backend pass
+    counts) hooked into the ``EdgeMapBackend`` dispatch layer so every
+    app/backend combination reports for free.
+
+Everything is off by default and bitwise-invisible to the computation when
+off; ``trace.enable()`` + ``counters.install()`` turn the lights on.
+"""
+from . import counters, metrics, trace
+from .counters import EdgeMapCounters, flat_edge_map_bytes
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      get_registry, reset_registry)
+from .trace import (NULL_TRACER, NullTracer, Tracer, load_trace,
+                    validate_trace)
+
+__all__ = [
+    "trace",
+    "metrics",
+    "counters",
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "load_trace",
+    "validate_trace",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "reset_registry",
+    "EdgeMapCounters",
+    "flat_edge_map_bytes",
+]

@@ -1,0 +1,325 @@
+"""Near-zero-overhead span tracer with Chrome-trace-event export.
+
+The measurement plane's clock: ``Tracer.span`` opens a nested, thread-safe
+span (context manager or decorator) on a monotone clock
+(``time.perf_counter_ns``); finished spans accumulate as Chrome trace
+events — the ``{"traceEvents": [...]}`` JSON that chrome://tracing and
+Perfetto load directly — with complete events (``ph == "X"``), microsecond
+timestamps, one track per thread.  Nesting is per-thread (a thread-local
+span stack tracks depth; Chrome infers the tree from timestamp containment
+within a ``tid``), so concurrent recorders never interleave each other's
+stacks.
+
+Tracing is OFF by default and costs one ``is``-check per call site when off:
+the module-level :func:`span` / :func:`instant` / :func:`counter` helpers
+dispatch to a process-global tracer that defaults to the :data:`NULL_TRACER`
+singleton, whose ``span()`` returns one shared no-op context manager — no
+allocation, no clock read, no lock.  ``enable()`` swaps in a live
+:class:`Tracer`; ``disable()`` swaps the null one back and returns the live
+tracer so the caller can still ``save()`` it.  Instrumented code paths are
+therefore safe to leave in hot loops: disabled-mode behavior is bitwise
+identical to uninstrumented code (the tracer never touches operand values).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+__all__ = [
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "enable",
+    "disable",
+    "enabled",
+    "get_tracer",
+    "span",
+    "instant",
+    "counter",
+    "traced",
+    "save",
+    "load_trace",
+    "validate_trace",
+]
+
+
+class _NullSpan:
+    """Shared do-nothing context manager — the disabled-mode fast path."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def add(self, **args) -> "_NullSpan":
+        return self
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """One open span; closing it appends a Chrome complete event."""
+
+    __slots__ = ("_tracer", "name", "cat", "args", "_start", "_tid", "depth")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 args: Optional[Dict[str, Any]]):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self._start = 0
+        self._tid = 0
+        self.depth = 0
+
+    def add(self, **args) -> "_Span":
+        """Attach result args discovered mid-span (shown in the trace UI)."""
+        if self.args is None:
+            self.args = {}
+        self.args.update(args)
+        return self
+
+    def __enter__(self):
+        tr = self._tracer
+        self._tid = threading.get_ident()
+        stack = tr._stack()
+        self.depth = len(stack)
+        stack.append(self)
+        self._start = tr._clock()
+        return self
+
+    def __exit__(self, *exc):
+        end = self._tracer._clock()
+        tr = self._tracer
+        stack = tr._stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        ev = {
+            "ph": "X",
+            "name": self.name,
+            "cat": self.cat or "repro",
+            "pid": tr.pid,
+            "tid": self._tid,
+            "ts": (self._start - tr.epoch) / 1e3,  # µs, trace-relative
+            "dur": (end - self._start) / 1e3,
+        }
+        if self.args:
+            ev["args"] = _jsonable(self.args)
+        with tr._lock:
+            tr.events.append(ev)
+        return False
+
+
+def _jsonable(args: Dict[str, Any]) -> Dict[str, Any]:
+    """Chrome trace args must be JSON — stringify anything exotic."""
+    out = {}
+    for k, v in args.items():
+        if isinstance(v, (bool, int, float, str)) or v is None:
+            out[k] = v
+        else:
+            out[k] = str(v)
+    return out
+
+
+class Tracer:
+    """Thread-safe span recorder on a monotone clock.
+
+    All spans of all threads accumulate into one event list (appends are
+    locked; open-span stacks are thread-local).  ``export()`` returns the
+    Chrome trace dict; ``save(path)`` writes it as JSON.
+    """
+
+    def __init__(self, clock=time.perf_counter_ns):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self.pid = os.getpid()
+        self.epoch = clock()  # ts 0 == tracer construction
+        self.events: List[Dict[str, Any]] = []
+
+    # -- internals -----------------------------------------------------------
+    def _stack(self) -> List[_Span]:
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
+
+    # -- recording -----------------------------------------------------------
+    def span(self, name: str, cat: str = "", **args) -> _Span:
+        """Open a span: ``with tracer.span("serve.batch", kind="sssp"): ...``"""
+        return _Span(self, name, cat, args or None)
+
+    def instant(self, name: str, cat: str = "", **args) -> None:
+        """A zero-duration marker event (``ph == "i"``)."""
+        ev = {
+            "ph": "i", "s": "t", "name": name, "cat": cat or "repro",
+            "pid": self.pid, "tid": threading.get_ident(),
+            "ts": (self._clock() - self.epoch) / 1e3,
+        }
+        if args:
+            ev["args"] = _jsonable(args)
+        with self._lock:
+            self.events.append(ev)
+
+    def counter(self, name: str, cat: str = "", **values) -> None:
+        """A Chrome counter sample (``ph == "C"`` — plotted as a track)."""
+        ev = {
+            "ph": "C", "name": name, "cat": cat or "repro",
+            "pid": self.pid, "tid": threading.get_ident(),
+            "ts": (self._clock() - self.epoch) / 1e3,
+            "args": _jsonable(values),
+        }
+        with self._lock:
+            self.events.append(ev)
+
+    @property
+    def depth(self) -> int:
+        """Open-span depth of the CALLING thread (0 at top level)."""
+        return len(self._stack())
+
+    # -- export --------------------------------------------------------------
+    def export(self) -> Dict[str, Any]:
+        with self._lock:
+            events = list(self.events)
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.export(), f)
+        return path
+
+
+class NullTracer:
+    """Disabled-mode tracer: every operation is a no-op.
+
+    ``span()`` hands back ONE shared context manager — identity-equal across
+    calls, so disabled-mode instrumentation allocates nothing and reads no
+    clock (the no-measurable-overhead contract).
+    """
+
+    def span(self, name: str, cat: str = "", **args) -> _NullSpan:
+        return _NULL_SPAN
+
+    def instant(self, name: str, cat: str = "", **args) -> None:
+        return None
+
+    def counter(self, name: str, cat: str = "", **values) -> None:
+        return None
+
+    @property
+    def depth(self) -> int:
+        return 0
+
+    def export(self) -> Dict[str, Any]:
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.export(), f)
+        return path
+
+
+NULL_TRACER = NullTracer()
+_TRACER: Any = NULL_TRACER
+
+
+# ---------------------------------------------------------------------------
+# process-global switch — what the instrumented call sites dispatch through
+# ---------------------------------------------------------------------------
+
+def enable(tracer: Optional[Tracer] = None) -> Tracer:
+    """Install ``tracer`` (or a fresh one) as the process-global tracer."""
+    global _TRACER
+    _TRACER = tracer if tracer is not None else Tracer()
+    return _TRACER
+
+
+def disable() -> Any:
+    """Restore the no-op tracer; returns the previously active tracer (so a
+    caller can still ``save()`` what it recorded)."""
+    global _TRACER
+    prev, _TRACER = _TRACER, NULL_TRACER
+    return prev
+
+
+def enabled() -> bool:
+    return _TRACER is not NULL_TRACER
+
+
+def get_tracer() -> Any:
+    return _TRACER
+
+
+def span(name: str, cat: str = "", **args):
+    """Module-level span against the global tracer (no-op when disabled)."""
+    return _TRACER.span(name, cat, **args)
+
+
+def instant(name: str, cat: str = "", **args) -> None:
+    _TRACER.instant(name, cat, **args)
+
+
+def counter(name: str, cat: str = "", **values) -> None:
+    _TRACER.counter(name, cat, **values)
+
+
+def save(path: str) -> str:
+    """Save the global tracer's events (works disabled too: empty trace)."""
+    return _TRACER.save(path)
+
+
+def traced(name: Optional[str] = None, cat: str = ""):
+    """Decorator form: ``@traced("core.dbg")`` spans every call of ``fn``."""
+
+    def deco(fn):
+        span_name = name or f"{fn.__module__.split('.')[-1]}.{fn.__name__}"
+
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            with _TRACER.span(span_name, cat):
+                return fn(*a, **kw)
+
+        return wrapper
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# schema helpers (tests + the CI trace-validation step)
+# ---------------------------------------------------------------------------
+
+def load_trace(path: str) -> Dict[str, Any]:
+    """Load + schema-check a Chrome trace JSON; returns the trace dict."""
+    with open(path) as f:
+        trace = json.load(f)
+    validate_trace(trace)
+    return trace
+
+
+def validate_trace(trace: Dict[str, Any]) -> None:
+    """Raise ``ValueError`` unless ``trace`` is a loadable Chrome trace:
+    a ``traceEvents`` list whose complete events carry name/ts/dur/pid/tid
+    with numeric, non-negative timing — the shape Perfetto ingests."""
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        raise ValueError("trace has no traceEvents list")
+    for ev in events:
+        if not isinstance(ev, dict) or "ph" not in ev or "name" not in ev:
+            raise ValueError(f"malformed event: {ev!r}")
+        if not isinstance(ev.get("ts"), (int, float)) or ev["ts"] < 0:
+            raise ValueError(f"event without numeric ts: {ev!r}")
+        if ev["ph"] == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                raise ValueError(f"complete event without dur: {ev!r}")
+            if "pid" not in ev or "tid" not in ev:
+                raise ValueError(f"complete event without pid/tid: {ev!r}")
+        if "args" in ev:
+            json.dumps(ev["args"])  # must round-trip

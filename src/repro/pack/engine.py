@@ -135,6 +135,9 @@ class PackedBackend(FusedEdgeMaps):
     row_tile: int = 64
     width_tile: int = 128
     interpret: bool = True
+    # build-time edge count, kept STATIC (pytree aux) so the observability
+    # hook can read it under jax tracing, where array values are abstract
+    num_edges: int = 0
 
     @property
     def num_vertices(self) -> int:
@@ -167,7 +170,8 @@ class PackedBackend(FusedEdgeMaps):
     def tree_flatten(self):
         return ((self.in_tiles, self.out_hot, self.out_cold,
                  self.in_deg, self.out_deg),
-                (self.row_tile, self.width_tile, self.interpret))
+                (self.row_tile, self.width_tile, self.interpret,
+                 self.num_edges))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -194,4 +198,5 @@ def packed_backend(pg: PackedGraph, *, row_tile: int = 64,
         out_cold=_cold_dev(pg.out_adj),
         in_deg=jnp.asarray(in_adj.degrees(), jnp.int32),
         out_deg=jnp.asarray(pg.out_adj.degrees(), jnp.int32),
-        row_tile=row_tile, width_tile=width_tile, interpret=interpret)
+        row_tile=row_tile, width_tile=width_tile, interpret=interpret,
+        num_edges=int(in_adj.degrees().sum()))

@@ -28,10 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..apps.engine import to_arrays
+from ..apps.engine import get_edge_map_hook, to_arrays
 from ..graph import csr
+from ..obs import trace as obs_trace
 from ..stream.service import StreamConfig, StreamService
-from .batch import PendingQuery, Query, QueryQueue
+from .batch import PendingQuery, Query, QueryQueue, QueueFull
 from .batched import batched_pagerank, batched_sssp
 from .metrics import ServeMetrics
 from .snapshot import Snapshot, SnapshotStore
@@ -81,12 +82,15 @@ class GraphServeService:
         self.config = config or ServeConfig()
         self._clock = clock
         self.stream = StreamService(g, self.config.stream)
-        self.store = SnapshotStore(self.stream.snapshot())
+        # one registry for the whole serving plane: serve.* metrics and the
+        # snapshot.* gauges/histograms read out of a single snapshot()
+        self.metrics = ServeMetrics(self.config.max_width)
+        self.store = SnapshotStore(self.stream.snapshot(),
+                                   registry=self.metrics.registry)
         self.queue = QueryQueue(
             max_width=self.config.max_width,
             max_depth=self.config.max_depth,
             deadline=self.config.deadline, clock=clock)
-        self.metrics = ServeMetrics(self.config.max_width)
         self._ingest_batches = 0
 
     # -- writer plane -------------------------------------------------------
@@ -95,12 +99,17 @@ class GraphServeService:
         """Apply one update batch to the stream plane.  In-flight query
         batches keep their pinned snapshot; a fresh snapshot is published
         every ``publish_every`` batches for FUTURE batches to pin."""
-        res = self.stream.ingest(add_src=add_src, add_dst=add_dst,
-                                 add_w=add_w, del_src=del_src,
-                                 del_dst=del_dst)
-        self._ingest_batches += 1
-        if self._ingest_batches % max(1, self.config.publish_every) == 0:
-            self.store.publish(self.stream.snapshot())
+        with obs_trace.span("serve.ingest", cat="serve",
+                            batch=self._ingest_batches + 1):
+            res = self.stream.ingest(add_src=add_src, add_dst=add_dst,
+                                     add_w=add_w, del_src=del_src,
+                                     del_dst=del_dst)
+            self._ingest_batches += 1
+            if self._ingest_batches % max(1, self.config.publish_every) == 0:
+                with obs_trace.span("serve.snapshot_materialize",
+                                    cat="serve"):
+                    g = self.stream.snapshot()
+                self.store.publish(g)
         return res
 
     @property
@@ -109,10 +118,17 @@ class GraphServeService:
 
     # -- reader plane -------------------------------------------------------
     def submit(self, query: Query) -> int:
-        return self.queue.submit(query)
+        try:
+            return self.queue.submit(query)
+        except QueueFull:
+            self.metrics.record_rejected()  # the shed the docstring promises
+            raise
 
     def cancel(self, qid: int) -> bool:
-        return self.queue.cancel(qid)
+        ok = self.queue.cancel(qid)
+        if ok:
+            self.metrics.record_cancelled()
+        return ok
 
     def pump(self) -> List[QueryResult]:
         """Dispatch ONE batch if the queue says it is ready (full width of
@@ -158,21 +174,34 @@ class GraphServeService:
         kind = batch[0].query.kind
         snap = self.store.acquire()  # every iteration sees THIS graph
         t0 = self._clock()
+        sp = obs_trace.span("serve.batch", cat="serve", kind=kind,
+                            width=len(batch), version=snap.version,
+                            backend=cfg.backend)
         try:
-            ga = self._backend(snap)
-            v = snap.graph.num_vertices
-            if kind == "pagerank":
-                plane = jnp.asarray(self._teleport_plane(v, batch))
-                vals, iters = batched_pagerank(
-                    ga, plane, damping=cfg.damping,
-                    max_iters=cfg.pr_max_iters, tol=cfg.pr_tol)
-            else:
-                roots = jnp.asarray([pq.query.root for pq in batch],
-                                    jnp.int32)
-                vals, iters = batched_sssp(
-                    ga, roots, max_iters=cfg.sssp_max_iters)
-            vals = np.asarray(jax.block_until_ready(vals))
-            iters = np.asarray(iters)
+            with sp:
+                ga = self._backend(snap)
+                v = snap.graph.num_vertices
+                with obs_trace.span(f"engine.solve.{kind}", cat="engine",
+                                    width=len(batch),
+                                    backend=cfg.backend) as solve_sp:
+                    if kind == "pagerank":
+                        plane = jnp.asarray(self._teleport_plane(v, batch))
+                        vals, iters = batched_pagerank(
+                            ga, plane, damping=cfg.damping,
+                            max_iters=cfg.pr_max_iters, tol=cfg.pr_tol)
+                    else:
+                        roots = jnp.asarray([pq.query.root for pq in batch],
+                                            jnp.int32)
+                        vals, iters = batched_sssp(
+                            ga, roots, max_iters=cfg.sssp_max_iters)
+                    vals = np.asarray(jax.block_until_ready(vals))
+                    iters = np.asarray(iters)
+                    solve_sp.add(iters=int(iters.sum()))
+                hook = get_edge_map_hook()
+                if hook is not None and hasattr(hook, "record_iters"):
+                    # the loop owner reports TRUE per-lane iteration counts
+                    # (the traced hook fires once per compile, not per iter)
+                    hook.record_iters(kind, iters)
         finally:
             self.store.release(snap)
         t1 = self._clock()

@@ -27,9 +27,12 @@ it, drop with the snapshot.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional
 
 from ..graph import csr
+from ..obs import trace as obs_trace
+from ..obs.metrics import MetricsRegistry
 
 __all__ = ["Snapshot", "SnapshotStore"]
 
@@ -52,14 +55,29 @@ class Snapshot:
 
 
 class SnapshotStore:
-    """Double-buffered, refcounted snapshot versions with epoch reclaim."""
+    """Double-buffered, refcounted snapshot versions with epoch reclaim.
 
-    def __init__(self, graph: Optional[csr.Graph] = None):
+    Observable (PR 7): the epoch-reclaim behavior is metered instead of
+    assert-only — ``snapshot.live_versions`` / ``snapshot.pinned_readers``
+    gauges, ``snapshot.published`` / ``snapshot.reclaimed`` counters, and a
+    ``snapshot.publish_seconds`` latency histogram land in ``registry``
+    (the service passes its ``ServeMetrics`` registry in, so one
+    ``registry.snapshot()`` shows the whole serving plane)."""
+
+    def __init__(self, graph: Optional[csr.Graph] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self._versions: Dict[int, Snapshot] = {}
         self._current: Optional[Snapshot] = None
         self._next_version = 0
         self.published = 0
         self.reclaimed = 0
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self._g_live = r.gauge("snapshot.live_versions")
+        self._g_pinned = r.gauge("snapshot.pinned_readers")
+        self._c_published = r.counter("snapshot.published")
+        self._c_reclaimed = r.counter("snapshot.reclaimed")
+        self._h_publish = r.histogram("snapshot.publish_seconds")
         if graph is not None:
             self.publish(graph)
 
@@ -68,14 +86,20 @@ class SnapshotStore:
         """Install ``graph`` as the new current version.  The previous
         version keeps serving its pinned readers and is reclaimed when the
         last of them releases (immediately, if it had none)."""
-        snap = Snapshot(version=self._next_version, graph=graph)
-        self._next_version += 1
-        prev, self._current = self._current, snap
-        self._versions[snap.version] = snap
-        self.published += 1
-        if prev is not None:
-            prev.retired = True
-            self._maybe_reclaim(prev)
+        t0 = time.perf_counter()
+        with obs_trace.span("serve.publish", cat="serve",
+                            version=self._next_version):
+            snap = Snapshot(version=self._next_version, graph=graph)
+            self._next_version += 1
+            prev, self._current = self._current, snap
+            self._versions[snap.version] = snap
+            self.published += 1
+            self._c_published.inc()
+            if prev is not None:
+                prev.retired = True
+                self._maybe_reclaim(prev)
+            self._g_live.set(len(self._versions))
+        self._h_publish.observe(time.perf_counter() - t0)
         return snap
 
     # -- reader side --------------------------------------------------------
@@ -91,6 +115,7 @@ class SnapshotStore:
         if self._current is None:
             raise RuntimeError("no snapshot published yet")
         self._current.refs += 1
+        self._g_pinned.inc()
         return self._current
 
     def release(self, snap: Snapshot) -> None:
@@ -98,6 +123,7 @@ class SnapshotStore:
             raise RuntimeError(
                 f"release of unpinned snapshot v{snap.version}")
         snap.refs -= 1
+        self._g_pinned.dec()
         self._maybe_reclaim(snap)
 
     # -- reclaim ------------------------------------------------------------
@@ -106,6 +132,10 @@ class SnapshotStore:
             self._versions.pop(snap.version, None)
             snap._cache.clear()  # drop cached backend state with the epoch
             self.reclaimed += 1
+            self._c_reclaimed.inc()
+            self._g_live.set(len(self._versions))
+            obs_trace.instant("serve.reclaim", cat="serve",
+                              version=snap.version)
 
     @property
     def live_versions(self) -> int:

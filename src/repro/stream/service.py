@@ -32,6 +32,8 @@ from ..cachesim import (DEFAULT_TRACE_LEN, flat_structure,
                         property_trace, scaled_hierarchy, stack_distances,
                         to_blocks)
 from ..graph import csr
+from ..obs import trace as obs_trace
+from ..obs.metrics import get_registry
 from ..pack.layout import PackedAdjacency, PackedGraph, pack_graph
 from .delta import ApplyResult, DeltaGraph
 from .incremental import IncrementalPageRank, IncrementalSSSP
@@ -174,12 +176,21 @@ class StreamService:
     def ingest(self, add_src=None, add_dst=None, add_w=None,
                del_src=None, del_dst=None) -> IngestStats:
         t0 = time.perf_counter()
-        result: ApplyResult = self.dg.apply(
-            add_src=add_src, add_dst=add_dst, add_w=add_w,
-            del_src=del_src, del_dst=del_dst)
-        self.pr.ingest(result)
-        for issp in self._sssp.values():
-            issp.ingest(result)
+        with obs_trace.span("stream.ingest", cat="stream",
+                            batch=self.batches_applied + 1):
+            return self._ingest(add_src, add_dst, add_w, del_src, del_dst, t0)
+
+    def _ingest(self, add_src, add_dst, add_w, del_src, del_dst,
+                t0) -> IngestStats:
+        with obs_trace.span("stream.apply", cat="stream"):
+            result: ApplyResult = self.dg.apply(
+                add_src=add_src, add_dst=add_dst, add_w=add_w,
+                del_src=del_src, del_dst=del_dst)
+        with obs_trace.span("stream.refresh", cat="stream",
+                            sssp_roots=len(self._sssp)):
+            self.pr.ingest(result)
+            for issp in self._sssp.values():
+                issp.ingest(result)
         self.batches_applied += 1
 
         regroup_s, moved = 0.0, 0
@@ -190,20 +201,26 @@ class StreamService:
                 touched = np.fromiter(self._touched_since_regroup,
                                       dtype=np.int64)
                 self._touched_since_regroup.clear()
-                delta = self.regrouper.update(touched, self.dg.out_deg[touched])
+                with obs_trace.span("stream.regroup", cat="stream",
+                                    touched=int(touched.size)) as sp:
+                    delta = self.regrouper.update(touched,
+                                                  self.dg.out_deg[touched])
+                    sp.add(moved=delta.num_moved)
                 self.remap_deltas.append(delta)
                 regroup_s, moved = delta.seconds, delta.num_moved
 
         compacted = False
         if self.dg.should_compact(self.config.compact_threshold):
-            fresh = self.dg.compact()
-            self.pr.resync()
+            with obs_trace.span("stream.compact", cat="stream"):
+                fresh = self.dg.compact()
+                self.pr.resync()
             self.compactions += 1
             compacted = True
             if self.config.repack_on_compact:
                 # compact() just materialized the fresh base CSR — pack it
                 # directly instead of snapshotting a second time
-                self.packed = pack_graph(fresh)
+                with obs_trace.span("stream.repack", cat="stream"):
+                    self.packed = pack_graph(fresh)
 
         stats = IngestStats(
             batch_index=self.batches_applied,
@@ -216,17 +233,19 @@ class StreamService:
 
     # -- queries --------------------------------------------------------------
     def pagerank(self) -> np.ndarray:
-        return self.pr.query()
+        with obs_trace.span("stream.query.pagerank", cat="stream"):
+            return self.pr.query()
 
     def sssp(self, root: int) -> np.ndarray:
         root = int(root)
-        issp = self._sssp.pop(root, None)
-        if issp is None:
-            issp = IncrementalSSSP(self.dg, root)
-        self._sssp[root] = issp  # re-insert: dict order tracks recency
-        while len(self._sssp) > max(1, self.config.max_sssp_roots):
-            self._sssp.pop(next(iter(self._sssp)))
-        return issp.query()
+        with obs_trace.span("stream.query.sssp", cat="stream", root=root):
+            issp = self._sssp.pop(root, None)
+            if issp is None:
+                issp = IncrementalSSSP(self.dg, root)
+            self._sssp[root] = issp  # re-insert: dict order tracks recency
+            while len(self._sssp) > max(1, self.config.max_sssp_roots):
+                self._sssp.pop(next(iter(self._sssp)))
+            return issp.query()
 
     def current_mapping(self) -> Optional[np.ndarray]:
         return (self.regrouper.current_mapping()
@@ -269,10 +288,17 @@ class StreamService:
         regrouping, the further the hot vertices drift from a dense layout)
         and how much the incremental mapping recovers.
         """
-        g = self.snapshot()
-        levels = scaled_hierarchy(g.num_vertices)
-        out = {"identity": layout_mpka(g, None, levels, mode, max_len)}
-        if self.regrouper is not None:
-            out["incremental_dbg"] = layout_mpka(
-                g, self.regrouper.current_mapping(), levels, mode, max_len)
+        with obs_trace.span("stream.locality", cat="stream", mode=mode):
+            g = self.snapshot()
+            levels = scaled_hierarchy(g.num_vertices)
+            out = {"identity": layout_mpka(g, None, levels, mode, max_len)}
+            if self.regrouper is not None:
+                out["incremental_dbg"] = layout_mpka(
+                    g, self.regrouper.current_mapping(), levels, mode, max_len)
+        # cachesim MPKA as live gauges: the latest locality probe is readable
+        # off the process registry next to the edge_map.* counters
+        reg = get_registry()
+        for layout, levels_mpka in out.items():
+            for level, v in levels_mpka.items():
+                reg.gauge(f"cachesim.mpka.{layout}.{level}").set(float(v))
         return out

@@ -1,0 +1,448 @@
+"""repro.obs: tracer semantics, metric bounds, and the no-perturbation
+contract of the edge-map instrumentation hook.
+
+The load-bearing property is the last one: installing the hook (and enabling
+tracing) must leave every engine result BITWISE identical on all three
+backends — observability that changes the numbers is a bug by construction.
+"""
+import json
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import pagerank, to_arrays
+from repro.apps.engine import (edge_map_pull, edge_map_push,
+                               get_edge_map_hook, set_edge_map_hook)
+from repro.graph import csr
+from repro.obs import counters as obs_counters
+from repro.obs import trace as obs_trace
+from repro.obs.counters import EdgeMapCounters, flat_edge_map_bytes
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               get_registry, reset_registry)
+from repro.obs.trace import NULL_TRACER, Tracer, load_trace, validate_trace
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs_globals():
+    """Every test starts and ends with tracing off and no engine hook."""
+    obs_trace.disable()
+    set_edge_map_hook(None)
+    yield
+    obs_trace.disable()
+    set_edge_map_hook(None)
+
+
+def _rand_graph(n, e, seed, weighted=False):
+    rng = np.random.default_rng(seed)
+    w = rng.random(e).astype(np.float32) + 0.01 if weighted else None
+    return csr.from_edges(rng.integers(0, n, e), rng.integers(0, n, e), n,
+                          weights=w)
+
+
+# ---------------------------------------------------------------- trace: spans
+def test_span_nesting_and_ordering():
+    tr = Tracer()
+    with tr.span("outer", cat="t") as outer:
+        assert tr.depth == 1
+        assert outer.depth == 0
+        with tr.span("inner", cat="t") as inner:
+            assert tr.depth == 2
+            assert inner.depth == 1
+        with tr.span("inner2", cat="t"):
+            pass
+    assert tr.depth == 0
+    evs = tr.export()["traceEvents"]
+    assert [e["name"] for e in evs] == ["inner", "inner2", "outer"]
+    by = {e["name"]: e for e in evs}
+    # Chrome infers the tree from timestamp containment: children inside
+    # the parent's [ts, ts+dur] window, siblings disjoint and ordered
+    for child in ("inner", "inner2"):
+        assert by["outer"]["ts"] <= by[child]["ts"]
+        assert (by[child]["ts"] + by[child]["dur"]
+                <= by["outer"]["ts"] + by["outer"]["dur"] + 1e-6)
+    assert (by["inner"]["ts"] + by["inner"]["dur"]
+            <= by["inner2"]["ts"] + 1e-6)
+
+
+def test_span_args_and_add():
+    tr = Tracer()
+    with tr.span("s", cat="t", kind="sssp") as sp:
+        sp.add(iters=7)
+    (ev,) = tr.export()["traceEvents"]
+    assert ev["args"] == {"kind": "sssp", "iters": 7}
+    # exotic arg values are stringified, never a JSON failure
+    with tr.span("s2", payload=np.arange(3)):
+        pass
+    validate_trace(tr.export())
+
+
+def test_traced_decorator_and_instant_counter():
+    tr = obs_trace.enable()
+
+    @obs_trace.traced("deco.fn", cat="t")
+    def fn(x):
+        return x + 1
+
+    assert fn(1) == 2
+    obs_trace.instant("mark", cat="t", n=1)
+    obs_trace.counter("ctr", cat="t", v=3)
+    obs_trace.disable()
+    names = {(e["ph"], e["name"]) for e in tr.export()["traceEvents"]}
+    assert {("X", "deco.fn"), ("i", "mark"), ("C", "ctr")} <= names
+
+
+def test_thread_safety_under_concurrent_recorders():
+    tr = Tracer()
+    n_threads, n_spans = 8, 50
+    barrier = threading.Barrier(n_threads)
+
+    def work(i):
+        barrier.wait()
+        for j in range(n_spans):
+            with tr.span(f"t{i}", cat="thread", j=j):
+                with tr.span(f"t{i}.inner", cat="thread"):
+                    pass
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    evs = tr.export()["traceEvents"]
+    assert len(evs) == n_threads * n_spans * 2
+    # per-thread stacks never interleave: every event carries its own tid,
+    # and each thread's inner spans nest inside that thread's outer spans
+    tids = {e["tid"] for e in evs}
+    assert len(tids) == n_threads
+    validate_trace(tr.export())
+
+
+def test_disabled_mode_is_noop_identity():
+    assert not obs_trace.enabled()
+    assert obs_trace.get_tracer() is NULL_TRACER
+    # one shared context manager: no per-call allocation when disabled
+    s1 = obs_trace.span("a", cat="x", k=1)
+    s2 = obs_trace.span("b")
+    assert s1 is s2
+    with s1 as s:
+        assert s.add(anything=1) is s
+    assert NULL_TRACER.export() == {"traceEvents": [],
+                                    "displayTimeUnit": "ms"}
+
+
+def test_enable_disable_round_trip():
+    tr = obs_trace.enable()
+    assert obs_trace.enabled() and obs_trace.get_tracer() is tr
+    with obs_trace.span("live"):
+        pass
+    prev = obs_trace.disable()
+    assert prev is tr and not obs_trace.enabled()
+    with obs_trace.span("dead"):  # after disable: recorded nowhere
+        pass
+    assert [e["name"] for e in tr.export()["traceEvents"]] == ["live"]
+
+
+def test_chrome_trace_json_round_trip(tmp_path):
+    tr = obs_trace.enable()
+    with obs_trace.span("outer", cat="rt", kind="demo"):
+        with obs_trace.span("inner", cat="rt"):
+            pass
+        obs_trace.instant("mark", cat="rt")
+    obs_trace.disable()
+    path = tr.save(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        raw = json.load(f)  # plain JSON, the shape Perfetto ingests
+    assert raw["displayTimeUnit"] == "ms"
+    trace = load_trace(path)  # load + schema check
+    names = [e["name"] for e in trace["traceEvents"]]
+    assert set(names) == {"outer", "inner", "mark"}
+    for ev in trace["traceEvents"]:
+        if ev["ph"] == "X":
+            assert ev["ts"] >= 0 and ev["dur"] >= 0
+            assert "pid" in ev and "tid" in ev
+
+
+def test_validate_trace_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_trace({})
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"ph": "X"}]})  # no name
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [
+            {"ph": "X", "name": "x", "ts": 0.0}]})  # no dur/pid/tid
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [
+            {"ph": "i", "name": "x", "ts": -1.0}]})  # negative ts
+
+
+# ------------------------------------------------------------------- metrics
+def test_counter_and_gauge():
+    c = Counter("c")
+    c.inc()
+    c.inc(5)
+    assert c.value == 6
+    g = Gauge("g")
+    g.set(2.5)
+    g.inc()
+    g.dec(0.5)
+    assert g.value == 3.0
+
+
+def test_histogram_reservoir_is_bounded_with_exact_aggregates():
+    h = Histogram("h", max_samples=64)
+    xs = np.arange(10_000, dtype=np.float64)
+    h.observe_many(xs)
+    assert h.num_samples == 64          # bounded memory
+    assert h.count == 10_000            # ...but exact count
+    assert h.total == xs.sum()          # exact sum
+    assert h.min == 0.0 and h.max == 9999.0
+    assert h.mean == pytest.approx(xs.mean())
+    # reservoir quantile of a uniform stream lands near the true quantile
+    assert h.quantile(0.5) == pytest.approx(5000, rel=0.35)
+
+
+def test_histogram_small_n_quantiles_exact():
+    h = Histogram("exact", max_samples=2048)
+    h.observe_many([10.0, 20.0, 30.0, 40.0, 50.0])
+    assert h.quantile(0.5) == 30.0
+    q = h.quantiles((0.5, 0.99))
+    assert q["p50"] == 30.0 and q["p99"] == pytest.approx(49.6)
+
+
+def test_histogram_empty_is_nan():
+    h = Histogram("empty")
+    assert np.isnan(h.mean) and np.isnan(h.quantile(0.5))
+    assert np.isnan(h.quantiles()["p99"])
+
+
+def test_registry_get_or_create_and_kind_check():
+    r = MetricsRegistry()
+    assert r.counter("a") is r.counter("a")
+    r.gauge("b")
+    r.histogram("c").observe(1.0)
+    with pytest.raises(TypeError):
+        r.gauge("a")  # registered as Counter
+    snap = r.snapshot()
+    assert snap["a"] == 0 and snap["b"] == 0.0
+    assert snap["c_count"] == 1 and snap["c_p50"] == 1.0
+    assert r.names() == ["a", "b", "c"]
+    json.dumps(snap)  # the BENCH-JSON-able contract
+
+
+def test_global_registry_reset():
+    r1 = get_registry()
+    r1.counter("x").inc()
+    r2 = reset_registry()
+    assert get_registry() is r2 and r2 is not r1
+    assert r2.get("x") is None
+
+
+# ------------------------------------------------- edge-map counters + hook
+def test_edge_map_counters_all_backends():
+    g = _rand_graph(40, 200, 0)
+    c = obs_counters.install(registry=MetricsRegistry())
+    assert get_edge_map_hook() is c
+    x = jnp.ones(40)
+    for bk in ("flat", "ell", "packed", "arrays"):
+        edge_map_pull(to_arrays(g, backend=bk), x)
+    s = c.summary()
+    for bk in ("flat", "ell", "packed", "arrays"):
+        assert s[f"edge_map.passes.{bk}.pull"] == 1
+    assert s["edge_map.edges"] == 4 * 200
+    assert s["edge_map.model_bytes"] > 0
+    obs_counters.uninstall()
+    assert get_edge_map_hook() is None
+
+
+def test_edge_map_counters_traced_vs_host_passes():
+    g = _rand_graph(40, 200, 1)
+    c = obs_counters.install(registry=MetricsRegistry())
+    ga = to_arrays(g)
+    _, iters = pagerank(ga, max_iters=5)  # edge maps run under jit
+    c.record_iters("pagerank", iters)
+    s = c.summary()
+    # the jitted loop fires the hook once per COMPILATION, not per iteration
+    assert s["edge_map.traced_passes.flat.pull"] == 1
+    assert "edge_map.passes.flat.pull" not in s
+    # ...true iteration counts arrive from the loop owner
+    assert s["edge_map.iters.pagerank"] == int(np.asarray(iters))
+    assert s["edge_map.queries.pagerank"] == 1
+    obs_counters.uninstall()
+
+
+def test_edge_map_counters_lanes_and_frontier_density():
+    g = _rand_graph(64, 400, 2)
+    c = obs_counters.install(registry=MetricsRegistry())
+    ga = to_arrays(g)
+    frontier = jnp.asarray(np.arange(64) < 32)
+    edge_map_pull(ga, jnp.ones((64, 4)))            # K=4 lanes, one pass
+    edge_map_push(ga, jnp.ones(64), src_frontier=frontier)
+    s = c.summary()
+    assert s["edge_map.lanes"] == 4 + 1
+    assert s["edge_map.frontier_density_count"] == 1
+    assert 0.0 <= s["edge_map.frontier_density_max"] <= 1.0
+    obs_counters.uninstall()
+
+
+def test_flat_bytes_model_matches_benchmark_model():
+    # the documented cross-check model of benchmarks/edge_map_perf.py,
+    # reproduced literally at plane_k=1
+    def legacy(e, v, *, weighted, frontier, push_init):
+        b = e * 4 + e * 4 + e * 4
+        if weighted:
+            b += e * 4 + 2 * e * 4
+        if frontier:
+            b += e * 1 + 2 * e * 4
+        b += e * 4 + e * 4 + v * 4
+        if push_init:
+            b += v * 4
+        return b
+
+    for weighted in (False, True):
+        for frontier in (False, True):
+            for push_init in (False, True):
+                kw = dict(weighted=weighted, frontier=frontier,
+                          push_init=push_init)
+                assert flat_edge_map_bytes(1000, 100, **kw) \
+                    == legacy(1000, 100, **kw)
+    # K lanes scale the value traffic, not the shared edge structure
+    assert flat_edge_map_bytes(1000, 100, plane_k=4) \
+        < 4 * flat_edge_map_bytes(1000, 100)
+
+
+@st.composite
+def _hook_case(draw):
+    n = draw(st.integers(8, 64))
+    e = draw(st.integers(1, 8)) * n
+    seed = draw(st.integers(0, 10_000))
+    backend = draw(st.sampled_from(["flat", "ell", "packed"]))
+    reduce = draw(st.sampled_from(["sum", "min", "max"]))
+    return n, e, seed, backend, reduce
+
+
+@settings(max_examples=10, deadline=None)
+@given(_hook_case())
+def test_instrumentation_never_perturbs_results(case):
+    """Instrumented (hook + tracing) vs bare runs are bitwise identical on
+    all three backends — the observability no-perturbation contract."""
+    n, e, seed, backend, reduce = case
+    g = _rand_graph(n, e, seed, weighted=True)
+    ga = to_arrays(g, backend=backend)
+    rng = np.random.default_rng(seed + 1)
+    prop = jnp.asarray(rng.random(n).astype(np.float32))
+    frontier = jnp.asarray(rng.random(n) < 0.5)
+    neutral = {"sum": 0.0, "min": np.inf, "max": -np.inf}[reduce]
+    kw = dict(reduce=reduce, src_frontier=frontier, use_weights=True,
+              neutral=neutral)
+
+    obs_trace.disable()
+    set_edge_map_hook(None)
+    bare_pull = np.asarray(edge_map_pull(ga, prop, **kw))
+    bare_push = np.asarray(edge_map_push(ga, prop, **kw))
+
+    obs_trace.enable()
+    obs_counters.install(registry=MetricsRegistry())
+    try:
+        inst_pull = np.asarray(edge_map_pull(ga, prop, **kw))
+        inst_push = np.asarray(edge_map_push(ga, prop, **kw))
+    finally:
+        obs_counters.uninstall()
+        obs_trace.disable()
+
+    np.testing.assert_array_equal(bare_pull, inst_pull)
+    np.testing.assert_array_equal(bare_push, inst_push)
+
+
+# --------------------------------------------------- serve-plane observability
+def test_serve_metrics_cancelled_rejected_and_bounded():
+    from repro.serve.metrics import ServeMetrics
+
+    m = ServeMetrics(max_width=4, max_samples=32)
+    for i in range(100):
+        m.record_batch("pagerank", 4, 0.01,
+                       latencies=[0.1] * 4, queue_waits=[0.01] * 4)
+    m.record_cancelled()
+    m.record_rejected(2)
+    assert m.cancelled == 1 and m.rejected == 2
+    s = m.summary()
+    assert s["cancelled"] == 1 and s["rejected"] == 2
+    assert s["completed"] == 400 and s["queries_pagerank"] == 400
+    # bounded reservoirs: 400 observations, 32 retained
+    assert m._latency.count == 400 and m._latency.num_samples == 32
+
+
+def test_serve_service_wires_cancel_and_reject_counts():
+    from repro.serve import GraphServeService, Query, ServeConfig
+    from repro.serve.batch import QueueFull
+
+    g = _rand_graph(30, 120, 3)
+    svc = GraphServeService(g, ServeConfig(max_width=2, max_depth=2,
+                                           pr_max_iters=3))
+    qid = svc.submit(Query("pagerank"))
+    svc.submit(Query("pagerank"))
+    assert svc.cancel(qid)
+    assert not svc.cancel(qid)  # double-cancel counts once
+    svc.submit(Query("pagerank"))
+    with pytest.raises(QueueFull):
+        svc.submit(Query("pagerank"))
+    assert svc.metrics.cancelled == 1
+    assert svc.metrics.rejected == 1
+
+
+def test_snapshot_store_gauges_and_publish_histogram():
+    from repro.serve.snapshot import SnapshotStore
+
+    g = _rand_graph(20, 60, 4)
+    reg = MetricsRegistry()
+    store = SnapshotStore(g, registry=reg)
+    snap = store.acquire()
+    assert reg.gauge("snapshot.pinned_readers").value == 1
+    store.publish(g)  # v0 retired but pinned: still live
+    assert reg.gauge("snapshot.live_versions").value == 2
+    assert store.live_versions == 2
+    store.release(snap)  # last reader gone -> epoch reclaim
+    assert reg.gauge("snapshot.live_versions").value == 1
+    assert reg.counter("snapshot.reclaimed").value == 1
+    assert reg.counter("snapshot.published").value == 2
+    assert reg.histogram("snapshot.publish_seconds").count == 2
+    assert reg.gauge("snapshot.pinned_readers").value == 0
+
+
+def test_stream_locality_sets_cachesim_gauges():
+    from repro.stream.service import StreamService
+
+    reset_registry()
+    g = _rand_graph(48, 300, 5)
+    svc = StreamService(g)
+    out = svc.locality()
+    snap = get_registry().snapshot()
+    for layout, levels in out.items():
+        for level, v in levels.items():
+            assert snap[f"cachesim.mpka.{layout}.{level}"] == v
+
+
+def test_serve_trace_covers_all_layers(tmp_path):
+    """A traced ingest+query run emits serve., stream., AND engine. spans —
+    the cross-layer wiring the benchmark's --trace flag exposes."""
+    from repro.serve import GraphServeService, Query, ServeConfig
+
+    g = _rand_graph(30, 150, 6)
+    tr = obs_trace.enable()
+    svc = GraphServeService(g, ServeConfig(max_width=2, pr_max_iters=3))
+    rng = np.random.default_rng(0)
+    svc.ingest(add_src=rng.integers(0, 30, 20),
+               add_dst=rng.integers(0, 30, 20))
+    svc.submit(Query("pagerank"))
+    svc.submit(Query("pagerank"))
+    svc.drain()
+    obs_trace.disable()
+    trace = load_trace(tr.save(str(tmp_path / "serve.json")))
+    names = {e["name"] for e in trace["traceEvents"]}
+    for expect in ("serve.ingest", "serve.publish", "serve.batch",
+                   "stream.ingest", "stream.apply",
+                   "engine.build_backend", "engine.solve.pagerank"):
+        assert expect in names, f"missing span {expect}: {sorted(names)}"
