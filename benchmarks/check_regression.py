@@ -1,0 +1,198 @@
+"""Bench perf-regression gate: fresh smoke output vs a committed baseline.
+
+The BENCH JSONs mix two kinds of numbers.  The *deterministic* ones —
+edge-map pass/compile counters, modeled HBM bytes, edges, lanes, ELL tile
+geometry — are functions of the graph and the code alone; any drift means
+the code changed what it executes (an extra edge-map pass, a recompilation
+storm, a cost-model edit) and MUST fail the gate exactly.  The *measured*
+ones — wall-clock, XLA's own cost_analysis bytes, convergence iteration
+counts — vary across machines and library versions, so they get tolerance
+bands wide enough for CI noise but tight enough to catch a 10x cliff.
+
+Comparison is structural: both JSONs are flattened to ``a.b.#.c`` paths
+(list indices become ``#`` so cells match positionally) and every baseline
+path is classified by the FIRST matching rule for its kind:
+
+  * ``exact``    — values must be equal (after float rounding);
+  * ``rel(tol)`` — ``|fresh - base| <= tol * max(|base|, floor)``;
+  * ``ignore``   — not compared (health snapshots, error bounds, paths).
+
+A fresh path missing from the baseline (or vice versa) outside the ignored
+set is a schema drift and fails too — a silently dropped counter column is
+exactly the regression this gate exists to catch.  Baselines carry a
+``schema`` version; a mismatch is an error (exit 2), telling the committer
+to regenerate ``benchmarks/baselines/`` rather than chase false diffs.
+
+Usage:
+  python benchmarks/check_regression.py serve baselines/BENCH_serve_smoke.json /tmp/BENCH_serve.json
+  python benchmarks/check_regression.py apps  baselines/BENCH_apps_smoke.json  /tmp/BENCH_apps.json
+
+Exit codes: 0 = within tolerance, 1 = regression, 2 = usage/schema error.
+"""
+import argparse
+import fnmatch
+import json
+import sys
+
+SCHEMA = 1
+
+EXACT, IGNORE = "exact", "ignore"
+
+
+def rel(tol, floor=1e-9):
+    return ("rel", float(tol), float(floor))
+
+
+# Ordered (pattern, rule) lists per bench kind; first match wins.  Patterns
+# are fnmatch globs over flattened paths (list indices appear as '#').
+RULES = {
+    "serve": [
+        # machine-dependent measurements: wide bands, still bounded
+        ("cells.#.qps", rel(4.0)),
+        ("cells.#.latency_*", rel(4.0)),
+        ("cells.#.occupancy", rel(0.25)),
+        # health is a live-burn-rate snapshot of one run — never gate on it
+        ("cells.#.health.*", IGNORE),
+        # iteration counts drift with float convergence across XLA versions
+        ("cells.#.counters.edge_map.iters.*", rel(0.25, floor=1.0)),
+        ("cells.#.counters.edge_map.frontier_density*", rel(0.5)),
+        # everything else the counters report is deterministic: pass counts,
+        # compiles/recompiles, edges, lanes, modeled bytes, query counts
+        ("cells.#.counters.*", EXACT),
+        ("summary.widest_over_serial_qps", rel(4.0)),
+        ("summary.qps_by_width.*", rel(4.0)),
+        ("*", EXACT),
+    ],
+    "apps": [
+        ("cells.#.orderings.*_ms", rel(4.0)),
+        # XLA's own cost_analysis bytes move across versions; the fused and
+        # analytic models are ours and must not
+        ("cells.#.orderings.*.flat_xla_bytes", rel(2.0)),
+        ("cells.#.orderings.*.max_err", IGNORE),
+        ("cells.#.apps.*.ms_per_iter", rel(4.0)),
+        ("cells.#.apps.*.iters", rel(0.25, floor=1.0)),
+        ("cells.#.apps.*.max_dev", IGNORE),
+        ("summary.*", IGNORE),  # derived booleans/ratios of measured values
+        ("*", EXACT),
+    ],
+}
+
+
+def flatten(node, prefix=""):
+    """`{'a': [{'b': 1}]}` -> `{'a.0.b': 1}` — cells align positionally."""
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = node
+    return out
+
+
+def canonical(path):
+    """Replace numeric segments (list indices) with `#` so rules written
+    once match every cell."""
+    return ".".join("#" if seg.isdigit() else seg
+                    for seg in path.split("."))
+
+
+def classify(path, rules):
+    for pat, rule in rules:
+        if fnmatch.fnmatchcase(path, pat):
+            return rule
+    return EXACT
+
+
+def compare_values(rule, base, fresh):
+    """None when within tolerance, else a human-readable reason."""
+    if rule == IGNORE:
+        return None
+    if isinstance(base, bool) or isinstance(fresh, bool) \
+            or isinstance(base, str) or isinstance(fresh, str) \
+            or base is None or fresh is None:
+        return (None if base == fresh
+                else f"changed: {base!r} -> {fresh!r}")
+    b, f = float(base), float(fresh)
+    if rule == EXACT:
+        if round(b, 9) != round(f, 9):
+            return f"exact mismatch: {base!r} -> {fresh!r}"
+        return None
+    _, tol, floor = rule
+    bound = tol * max(abs(b), floor)
+    if abs(f - b) > bound:
+        return (f"outside {tol:g}x band: {base!r} -> {fresh!r} "
+                f"(|delta| {abs(f - b):.6g} > {bound:.6g})")
+    return None
+
+
+class SchemaError(Exception):
+    """Usage-level mismatch (unknown kind / wrong schema version): the gate
+    cannot meaningfully compare — exit 2, not a regression verdict."""
+
+
+def check(kind, base_doc, fresh_doc):
+    """Compare two bench documents; returns the list of violations."""
+    if kind not in RULES:
+        raise SchemaError(
+            f"unknown bench kind {kind!r}; known: {', '.join(sorted(RULES))}")
+    for name, doc in (("baseline", base_doc), ("fresh", fresh_doc)):
+        got = doc.get("schema")
+        if got != SCHEMA:
+            raise SchemaError(
+                f"{name} schema {got!r} != expected {SCHEMA} — regenerate "
+                "benchmarks/baselines/ with the current bench scripts")
+    rules = RULES[kind]
+    base = flatten(base_doc)
+    fresh = flatten(fresh_doc)
+    violations = []
+    for path in sorted(set(base) | set(fresh)):
+        cpath = canonical(path)
+        rule = classify(cpath, rules)
+        if rule == IGNORE:
+            continue
+        if path not in base:
+            violations.append(f"{path}: new key (not in baseline)")
+            continue
+        if path not in fresh:
+            violations.append(f"{path}: missing key (in baseline only)")
+            continue
+        reason = compare_values(rule, base[path], fresh[path])
+        if reason is not None:
+            violations.append(f"{path}: {reason}")
+    return violations
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("kind", choices=sorted(RULES),
+                    help="which rule set: serve (BENCH_serve) or apps "
+                         "(BENCH_apps)")
+    ap.add_argument("baseline", help="committed smoke baseline JSON")
+    ap.add_argument("fresh", help="freshly produced smoke output JSON")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as fh:
+        base_doc = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh_doc = json.load(fh)
+    try:
+        violations = check(args.kind, base_doc, fresh_doc)
+    except SchemaError as exc:
+        print(f"[check_regression] error: {exc}", file=sys.stderr)
+        return 2
+    if violations:
+        print(f"[check_regression] {args.kind}: "
+              f"{len(violations)} violation(s) vs {args.baseline}:")
+        for v in violations:
+            print(f"  FAIL {v}")
+        return 1
+    n = len(flatten(base_doc))
+    print(f"[check_regression] {args.kind}: OK — {n} baseline paths, "
+          f"0 violations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

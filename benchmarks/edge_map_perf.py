@@ -201,7 +201,8 @@ def main() -> None:
             else args.datasets.split(","))
     orderings = args.orderings.split(",")
 
-    out = {"scale": args.scale, "orderings": orderings, "cells": []}
+    out = {"schema": 1, "scale": args.scale, "orderings": orderings,
+           "cells": []}
     for key in keys:
         g = datasets.load(key, args.scale, seed=0)
         gw = datasets.load_weighted(key, args.scale, seed=0)

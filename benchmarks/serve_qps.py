@@ -40,6 +40,7 @@ import numpy as np
 from repro.apps import to_arrays
 from repro.graph import datasets
 from repro.obs import counters as obs_counters
+from repro.obs import flight as obs_flight
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry
 from repro.serve import (GraphServeService, Query, ServeConfig, batched_sssp)
@@ -92,6 +93,7 @@ def bench_width(g, k: int, *, queries: int, churn: int, backend: str,
         for snap in pins.values():
             svc.store.release(snap)
         summary = svc.metrics.summary()
+        health = svc.health()
         obs_counters.uninstall()
     return {
         "width": k,
@@ -104,6 +106,9 @@ def bench_width(g, k: int, *, queries: int, churn: int, backend: str,
         "isolation_checked": True,
         # per-pass edge-map telemetry of the timed pass (repro.obs.counters)
         "counters": counters.summary(),
+        # SLO burn rates + queue/snapshot state at end of the timed pass
+        # (repro.obs.slo; machine-dependent — the regression gate skips it)
+        "health": health,
     }
 
 
@@ -140,6 +145,10 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a Chrome trace (serve/stream/engine spans) "
                          "and save it here — load in Perfetto")
+    ap.add_argument("--flight", default=None, metavar="DIR",
+                    help="arm the always-on flight recorder; anomaly dumps "
+                         "(SLO breach, QueueFull, reclaim stall) land in DIR "
+                         "plus a final flight_final.json ring snapshot")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_serve.json"))
@@ -150,9 +159,10 @@ def main() -> None:
     widths = [int(w) for w in args.widths.split(",")]
     if args.trace:
         obs_trace.enable()
+    fr = obs_flight.install(dump_dir=args.flight) if args.flight else None
 
     g = datasets.load(args.dataset, args.scale, seed=0)
-    out = {"dataset": args.dataset, "scale": args.scale,
+    out = {"schema": 1, "dataset": args.dataset, "scale": args.scale,
            "backend": args.backend, "queries_per_cell": args.queries,
            "churn_batch": args.churn, "cells": []}
     for k in widths:
@@ -178,6 +188,11 @@ def main() -> None:
     if args.trace:
         print(f"[serve_qps] trace -> {obs_trace.save(args.trace)}",
               flush=True)
+    if fr is not None:
+        final = fr.dump(os.path.join(args.flight, "flight_final.json"))
+        print(f"[serve_qps] flight ring ({len(fr)} events, "
+              f"{len(fr.triggers)} anomalies) -> {final}", flush=True)
+        obs_flight.uninstall()
     print(f"[serve_qps] wrote {args.out} (qps_increases_with_width="
           f"{out['summary']['qps_increases_with_width']}, widest/serial="
           f"{out['summary']['widest_over_serial_qps']}x)", flush=True)

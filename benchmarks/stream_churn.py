@@ -150,6 +150,9 @@ def bench_cell(key: str, scale: str, policy: str, batch_size: int,
         "full_dbg_relabel_seconds": full_relabel_s,
         "mpka_identity": mpka_id,
         "mpka_full_dbg": mpka_full,
+        # ingest-plane SLO burn rates at end of the timed pass
+        # (machine-dependent — the regression gate skips it)
+        "health": svc.health(),
     }
     if policy == "incremental_dbg":
         cell["mpka_incremental"] = layout_mpka(
@@ -285,7 +288,8 @@ def main() -> None:
         args.scale, args.batches, args.batch_sizes = "test", 2, "64"
 
     batch_sizes = [int(x) for x in args.batch_sizes.split(",")]
-    out = {"scale": args.scale, "batches": args.batches, "cells": []}
+    out = {"schema": 1, "scale": args.scale, "batches": args.batches,
+           "cells": []}
     shared_final: dict = {}
     for key in args.datasets.split(","):
         for batch_size in batch_sizes:

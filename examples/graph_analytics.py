@@ -4,9 +4,12 @@ a backend-selection section (FlatBackend vs the fused-Pallas EllBackend from
 kernels.edge_map), a packed-storage section (repro.pack: hot/cold segmented
 compressed CSR with analytics running directly over it), plus a streaming
 section: DeltaGraph ingest with incremental PageRank refresh and online DBG
-maintenance (repro.stream), and a batched-serving section: K concurrent
+maintenance (repro.stream), a batched-serving section: K concurrent
 queries answered in one fused pass per iteration against refcounted graph
-snapshots while ingest churns underneath (repro.serve).
+snapshots while ingest churns underneath (repro.serve), and a health-plane
+section: SLO burn rates plus a deliberately induced latency breach whose
+flight-recorder dump carries the offending query's causal flow chain
+(repro.obs.slo / repro.obs.flight).
 
   PYTHONPATH=src python examples/graph_analytics.py [dataset]
 """
@@ -200,6 +203,33 @@ def main():
                  if k.startswith("edge_map.iters.")}
     print(f"  edge-map telemetry: {iters_sum} "
           f"(true loop iterations, reported by the batch dispatcher)")
+
+    # ----- health plane: SLO burn rates + flight-recorder anomaly dumps -----
+    # The flight recorder is the always-on production counterpart of the
+    # tracer: a fixed-capacity ring of recent events that anomalies snapshot
+    # automatically.  Here we arm it and induce a breach on purpose: an
+    # impossibly tight latency SLO turns the first served batch into an SLO
+    # breach, whose dump carries the offending query's id-linked
+    # submit → wait → solve → result flow chain (select its qid in Perfetto).
+    from repro.obs import flight as obs_flight
+
+    print("\nhealth plane (repro.obs.slo + repro.obs.flight):")
+    obs_flight.install(capacity=2048, dump_dir="/tmp/flight", cooldown_s=0.0)
+    tight = GraphServeService(g, ServeConfig(
+        max_width=2, slo_latency_p99_s=1e-9))  # any answer breaches
+    for root in rng.integers(0, v, 2):
+        tight.submit(Query("sssp", root=int(root)))
+    tight.drain()
+    h = tight.health()
+    lat = h["objectives"]["serve.latency"]
+    print(f"  health: {h['status']} — serve.latency worst burn rate "
+          f"{lat['worst_burn']:.1f}x over "
+          f"{'/'.join(lat['windows'])} windows")
+    fr = obs_flight.get_flight()
+    print(f"  anomalies: {[t['reason'] for t in fr.triggers]} -> dumps in "
+          f"/tmp/flight ({len(fr)} ring events); healthy-plane check: "
+          f"stream ingest {serve.stream.health()['status']}")
+    obs_flight.uninstall()
 
 
 if __name__ == "__main__":

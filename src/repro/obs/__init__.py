@@ -11,15 +11,24 @@ The measurement plane the rest of the stack stands on:
   * :mod:`repro.obs.counters` — per-edge-map-pass telemetry (edges
     traversed, modeled HBM bytes, frontier density, per-backend pass
     counts) hooked into the ``EdgeMapBackend`` dispatch layer so every
-    app/backend combination reports for free.
+    app/backend combination reports for free;
+  * :mod:`repro.obs.flight`   — always-on fixed-capacity flight recorder
+    (O(1) ring append, Perfetto-loadable dumps) with anomaly triggers that
+    preserve the events leading up to an incident;
+  * :mod:`repro.obs.slo`      — declarative objectives over rolling windows
+    with multi-window burn rates, behind ``GraphServeService.health()`` /
+    ``StreamService.health()``.
 
 Everything is off by default and bitwise-invisible to the computation when
-off; ``trace.enable()`` + ``counters.install()`` turn the lights on.
+off; ``trace.enable()`` + ``counters.install()`` turn the lights on, and
+``flight.install()`` arms the bounded always-on recorder.
 """
-from . import counters, metrics, trace
+from . import counters, flight, metrics, slo, trace
 from .counters import EdgeMapCounters, flat_edge_map_bytes
+from .flight import FlightRecorder
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       get_registry, reset_registry)
+from .slo import Objective, SLOTracker
 from .trace import (NULL_TRACER, NullTracer, Tracer, load_trace,
                     validate_trace)
 
@@ -27,11 +36,16 @@ __all__ = [
     "trace",
     "metrics",
     "counters",
+    "flight",
+    "slo",
     "Tracer",
     "NullTracer",
     "NULL_TRACER",
     "load_trace",
     "validate_trace",
+    "FlightRecorder",
+    "Objective",
+    "SLOTracker",
     "Counter",
     "Gauge",
     "Histogram",

@@ -31,6 +31,7 @@ costs one ``is not None`` check per dispatch.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -114,6 +115,8 @@ class EdgeMapCounters:
 
       ``edge_map.passes.{backend}.{direction}``          host-dispatched
       ``edge_map.traced_passes.{backend}.{direction}``   fired under jit trace
+      ``edge_map.compiles.{backend}.{direction}``        NEW trace signatures
+      ``edge_map.recompiles.{backend}.{direction}``      repeat signatures
       ``edge_map.edges``                                 edges traversed
       ``edge_map.lanes``                                 ``K`` summed per pass
       ``edge_map.model_bytes``                           modeled HBM bytes
@@ -127,6 +130,8 @@ class EdgeMapCounters:
 
     def __init__(self, registry: Optional[MetricsRegistry] = None):
         self.registry = registry if registry is not None else get_registry()
+        self._seen_signatures: set = set()
+        self._sig_lock = threading.Lock()
 
     # -- the engine hook -----------------------------------------------------
     def on_pass(self, ga: Any, direction: str, prop: Any,
@@ -141,7 +146,24 @@ class EdgeMapCounters:
         reg.counter(f"edge_map.{kind}.{name}.{direction}").inc()
         if traced:
             # under jit the hook fires once per COMPILATION; per-iteration
-            # totals arrive via record_iters from the loop owner
+            # totals arrive via record_iters from the loop owner.  A traced
+            # fire with a signature (backend, direction, static shapes) never
+            # seen before is a genuine compile; a REPEAT signature means jax
+            # re-traced work it already compiled — the recompilation-storm
+            # smell the compiles/recompiles split makes visible.
+            sig = (name, direction,
+                   tuple(getattr(prop, "shape", ())),
+                   str(getattr(prop, "dtype", "")),
+                   _static_num_edges(ga),
+                   bool(kw.get("use_weights", False)),
+                   kw.get("src_frontier") is not None,
+                   str(kw.get("reduce", "sum")))
+            with self._sig_lock:
+                fresh = sig not in self._seen_signatures
+                if fresh:
+                    self._seen_signatures.add(sig)
+            which = "compiles" if fresh else "recompiles"
+            reg.counter(f"edge_map.{which}.{name}.{direction}").inc()
             return
 
         edges = self._num_edges(ga, name)
@@ -162,7 +184,7 @@ class EdgeMapCounters:
         if density is not None:
             reg.histogram("edge_map.frontier_density").observe(density)
 
-        if obs_trace.enabled():
+        if obs_trace.recording():  # full tracer OR the flight ring
             obs_trace.counter(
                 "edge_map", cat="engine",
                 edges=reg.counter("edge_map.edges").value,

@@ -17,12 +17,27 @@ Every result is stamped with the snapshot ``version`` it was answered
 against: snapshot isolation is an observable contract (a version-N answer
 equals a from-scratch run on the version-N graph, however much ingest has
 landed since), not just an implementation detail.
+
+Observability (PR 8) — the query path is CAUSALLY traceable and the service
+is self-diagnosing:
+
+  * every query's life is an id-tagged chain: a ``serve.query`` flow start
+    + async span at submit, a flow step at batch dispatch (stamped with
+    ``batch_epoch`` and ``snapshot_version``), and a flow end + async end at
+    result (or cancel) — select one qid in Perfetto and its whole
+    submit → wait → solve → result path lights up;
+  * :meth:`GraphServeService.health` evaluates declarative SLOs (latency
+    p99, rejection rate, snapshot staleness) over rolling windows with
+    multi-window burn rates (``repro.obs.slo``);
+  * incidents — an SLO breach, a ``QueueFull`` rejection — snapshot the
+    always-on flight ring (``repro.obs.flight``) so the events leading up
+    to the anomaly are preserved even when full tracing is off.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +45,9 @@ import numpy as np
 
 from ..apps.engine import get_edge_map_hook, to_arrays
 from ..graph import csr
+from ..obs import flight as obs_flight
 from ..obs import trace as obs_trace
+from ..obs.slo import Objective, SLOTracker
 from ..stream.service import StreamConfig, StreamService
 from .batch import PendingQuery, Query, QueryQueue, QueueFull
 from .batched import batched_pagerank, batched_sssp
@@ -58,6 +75,12 @@ class ServeConfig:
     pr_tol: float = 1e-7
     pr_max_iters: int = 64
     sssp_max_iters: int = 0  # 0 = Bellman-Ford bound (V)
+    # service-level objectives (repro.obs.slo); evaluated by health() and on
+    # every recorded result/rejection with multi-window burn rates
+    slo_latency_p99_s: float = 2.0     # end-to-end latency the p99 must beat
+    slo_rejection_rate: float = 0.05   # QueueFull budget per admission
+    slo_staleness_s: float = 60.0      # max age of the current snapshot
+    slo_windows: Tuple[float, ...] = (30.0, 300.0)  # rolling, short -> long
     # forwarded to the ingest plane
     stream: Optional[StreamConfig] = None
 
@@ -92,6 +115,28 @@ class GraphServeService:
             max_depth=self.config.max_depth,
             deadline=self.config.deadline, clock=clock)
         self._ingest_batches = 0
+        self._batch_epoch = 0  # monotone id of every dispatched batch
+        w = tuple(self.config.slo_windows)
+        self.slo = SLOTracker([
+            Objective("serve.latency", kind="quantile",
+                      target=self.config.slo_latency_p99_s, quantile=0.99,
+                      windows=w,
+                      description="end-to-end query latency (submit→result)"),
+            Objective("serve.rejection_rate", kind="rate",
+                      target=self.config.slo_rejection_rate, windows=w,
+                      description="QueueFull rejections per admission"),
+            Objective("serve.snapshot_staleness", kind="value",
+                      target=self.config.slo_staleness_s, windows=w,
+                      description="age of the current published snapshot"),
+        ], clock=clock, on_breach=self._on_slo_breach)
+
+    def _on_slo_breach(self, name: str, info: Dict[str, Any]) -> None:
+        """Edge-triggered by the SLO tracker: snapshot the flight ring with
+        the events leading up to the breach (no-op when none is armed)."""
+        ctx = info.get("context", {})
+        obs_flight.trigger("slo_breach", objective=name,
+                           worst_burn=round(float(info["worst_burn"]), 3),
+                           **ctx)
 
     # -- writer plane -------------------------------------------------------
     def ingest(self, add_src=None, add_dst=None, add_w=None,
@@ -119,15 +164,32 @@ class GraphServeService:
     # -- reader plane -------------------------------------------------------
     def submit(self, query: Query) -> int:
         try:
-            return self.queue.submit(query)
+            qid = self.queue.submit(query)
         except QueueFull:
             self.metrics.record_rejected()  # the shed the docstring promises
+            self.slo.observe_ok("serve.rejection_rate", False,
+                                context={"kind": query.kind,
+                                         "depth": self.queue.depth})
+            obs_flight.trigger("queue_full", kind=query.kind,
+                               depth=self.queue.depth,
+                               max_depth=self.config.max_depth)
             raise
+        self.slo.observe_ok("serve.rejection_rate", True)
+        # the query's causal chain starts here; the same qid links the flow
+        # start, the batch-dispatch step, and the result/cancel end
+        obs_trace.flow_start("serve.query", qid, cat="serve", kind=query.kind)
+        obs_trace.async_begin("serve.query", qid, cat="serve",
+                              kind=query.kind)
+        return qid
 
     def cancel(self, qid: int) -> bool:
         ok = self.queue.cancel(qid)
         if ok:
             self.metrics.record_cancelled()
+            obs_trace.flow_end("serve.query", qid, cat="serve",
+                               cancelled=True)
+            obs_trace.async_end("serve.query", qid, cat="serve",
+                                cancelled=True)
         return ok
 
     def pump(self) -> List[QueryResult]:
@@ -173,16 +235,24 @@ class GraphServeService:
         cfg = self.config
         kind = batch[0].query.kind
         snap = self.store.acquire()  # every iteration sees THIS graph
+        self._batch_epoch += 1
+        epoch = self._batch_epoch
         t0 = self._clock()
         sp = obs_trace.span("serve.batch", cat="serve", kind=kind,
-                            width=len(batch), version=snap.version,
-                            backend=cfg.backend)
+                            width=len(batch), batch_epoch=epoch,
+                            version=snap.version, backend=cfg.backend)
         try:
             with sp:
+                for pq in batch:
+                    # the wait→dispatch hop of each query's causal chain
+                    obs_trace.flow_step("serve.query", pq.qid, cat="serve",
+                                        batch_epoch=epoch,
+                                        snapshot_version=snap.version)
                 ga = self._backend(snap)
                 v = snap.graph.num_vertices
                 with obs_trace.span(f"engine.solve.{kind}", cat="engine",
-                                    width=len(batch),
+                                    width=len(batch), batch_epoch=epoch,
+                                    version=snap.version,
                                     backend=cfg.backend) as solve_sp:
                     if kind == "pagerank":
                         plane = jnp.asarray(self._teleport_plane(v, batch))
@@ -219,4 +289,35 @@ class GraphServeService:
             kind, len(batch), t1 - t0,
             latencies=[r.latency for r in results],
             queue_waits=[r.queue_wait for r in results])
+        for r in results:
+            obs_trace.flow_end("serve.query", r.qid, cat="serve",
+                               iters=r.iters, version=r.snapshot_version)
+            obs_trace.async_end("serve.query", r.qid, cat="serve",
+                                iters=r.iters, version=r.snapshot_version)
+            self.slo.observe("serve.latency", r.latency,
+                             context={"qid": r.qid, "kind": kind,
+                                      "batch_epoch": epoch,
+                                      "snapshot_version": r.snapshot_version})
         return results
+
+    # -- health plane -------------------------------------------------------
+    def health(self) -> Dict[str, Any]:
+        """One JSON-able health snapshot: SLO burn rates, queue pressure,
+        and snapshot-store state — what an operator (or the per-cell
+        ``benchmarks/serve_qps.py`` output) polls."""
+        self.slo.observe("serve.snapshot_staleness",
+                         time.monotonic() - self.store.last_publish_at)
+        h = self.slo.health()
+        h["queue"] = {
+            "depth": self.queue.depth,
+            "submitted": self.queue.submitted,
+            "rejected": self.queue.rejected,
+            "cancelled": self.queue.cancelled,
+        }
+        h["snapshots"] = {
+            "version": self.store.current_version,
+            "live_versions": self.store.live_versions,
+            "batch_epoch": self._batch_epoch,
+            "ingest_batches": self._ingest_batches,
+        }
+        return h

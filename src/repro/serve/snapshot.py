@@ -31,6 +31,7 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 from ..graph import csr
+from ..obs import flight as obs_flight
 from ..obs import trace as obs_trace
 from ..obs.metrics import MetricsRegistry
 
@@ -62,15 +63,26 @@ class SnapshotStore:
     gauges, ``snapshot.published`` / ``snapshot.reclaimed`` counters, and a
     ``snapshot.publish_seconds`` latency histogram land in ``registry``
     (the service passes its ``ServeMetrics`` registry in, so one
-    ``registry.snapshot()`` shows the whole serving plane)."""
+    ``registry.snapshot()`` shows the whole serving plane).
+
+    Self-diagnosing (PR 8): when retired-but-still-pinned versions pile past
+    ``stall_threshold`` at publish time — a reader sitting on old epochs and
+    leaking their cached backends — a ``reclaim_stall`` anomaly snapshots
+    the flight ring (``repro.obs.flight``)."""
 
     def __init__(self, graph: Optional[csr.Graph] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 stall_threshold: int = 4):
         self._versions: Dict[int, Snapshot] = {}
         self._current: Optional[Snapshot] = None
         self._next_version = 0
         self.published = 0
         self.reclaimed = 0
+        #: retired-but-still-pinned versions tolerated before publish() flags
+        #: a reclaim stall (a reader holding snapshots across many epochs
+        #: leaks every cached backend it pins)
+        self.stall_threshold = int(stall_threshold)
+        self.last_publish_at = time.monotonic()
         self.registry = registry if registry is not None else MetricsRegistry()
         r = self.registry
         self._g_live = r.gauge("snapshot.live_versions")
@@ -99,6 +111,14 @@ class SnapshotStore:
                 prev.retired = True
                 self._maybe_reclaim(prev)
             self._g_live.set(len(self._versions))
+            stalled = [s.version for s in self._versions.values()
+                       if s.retired and s.refs > 0]
+            if len(stalled) > self.stall_threshold:
+                obs_flight.trigger("reclaim_stall",
+                                   retired_pinned=len(stalled),
+                                   versions=sorted(stalled),
+                                   threshold=self.stall_threshold)
+        self.last_publish_at = time.monotonic()
         self._h_publish.observe(time.perf_counter() - t0)
         return snap
 

@@ -18,12 +18,18 @@ original ids vs. under the incrementally-maintained DBG mapping — the
 streaming analogue of the paper's Fig 9 structure-vs-footprint tension
 (how fast does locality decay as updates pile up, and how much of it does
 cheap online regrouping claw back).
+
+Self-diagnosing (PR 8): ``health()`` evaluates ingest-plane SLOs (per-batch
+ingest time p99, ingest lag) with multi-window burn rates, and the two
+ingest-side incident classes — an SLO breach and a ``RemapOverflow`` in
+shard-aware update routing — snapshot the always-on flight ring
+(``repro.obs.flight``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -32,8 +38,10 @@ from ..cachesim import (DEFAULT_TRACE_LEN, flat_structure,
                         property_trace, scaled_hierarchy, stack_distances,
                         to_blocks)
 from ..graph import csr
+from ..obs import flight as obs_flight
 from ..obs import trace as obs_trace
 from ..obs.metrics import get_registry
+from ..obs.slo import Objective, SLOTracker
 from ..pack.layout import PackedAdjacency, PackedGraph, pack_graph
 from .delta import ApplyResult, DeltaGraph
 from .incremental import IncrementalPageRank, IncrementalSSSP
@@ -129,6 +137,12 @@ class StreamConfig:
     damping: float = 0.85
     pr_epsilon: float = 1e-9
     pr_max_iters: int = 4096
+    # ingest-plane SLOs (repro.obs.slo), surfaced by health(): p99 bound on
+    # one batch's ingest time, and the max tolerated gap since the last batch
+    # landed (ingest lag — a stalled feed shows up here, not in latency)
+    slo_ingest_p99_s: float = 5.0
+    slo_ingest_lag_s: float = 300.0
+    slo_windows: Tuple[float, ...] = (30.0, 300.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +185,23 @@ class StreamService:
         # vertices never change out-degree, so the regrouper — which bins on
         # out-degree — need not see them)
         self._touched_since_regroup: set = set()
+        w = tuple(self.config.slo_windows)
+        self.slo = SLOTracker([
+            Objective("stream.ingest_seconds", kind="quantile",
+                      target=self.config.slo_ingest_p99_s, quantile=0.99,
+                      windows=w,
+                      description="per-batch ingest wall time p99"),
+            Objective("stream.ingest_lag", kind="value",
+                      target=self.config.slo_ingest_lag_s, windows=w,
+                      description="seconds since the last ingest batch"),
+        ], on_breach=self._on_slo_breach)
+        self._last_ingest_at = time.monotonic()
+
+    def _on_slo_breach(self, name: str, info: Dict[str, Any]) -> None:
+        ctx = info.get("context", {})
+        obs_flight.trigger("slo_breach", objective=name,
+                           worst_burn=round(float(info["worst_burn"]), 3),
+                           **ctx)
 
     # -- ingest ---------------------------------------------------------------
     def ingest(self, add_src=None, add_dst=None, add_w=None,
@@ -229,6 +260,11 @@ class StreamService:
             moved_vertices=moved, compacted=compacted,
             total_seconds=time.perf_counter() - t0)
         self.history.append(stats)
+        self._last_ingest_at = time.monotonic()
+        self.slo.observe("stream.ingest_seconds", stats.total_seconds,
+                         context={"batch_index": stats.batch_index,
+                                  "inserted": stats.inserted,
+                                  "deleted": stats.deleted})
         return stats
 
     # -- queries --------------------------------------------------------------
@@ -268,16 +304,40 @@ class StreamService:
         see ROADMAP) — this tracks the grouping, the performance-critical
         part of the paper's argument.
         """
-        from ..dist.graph import apply_remap
+        from ..dist.graph import RemapOverflow, apply_remap
 
         consumed = len(self.remap_deltas)
-        out = apply_remap(
-            sg, RemapDelta.merge(self.remap_deltas[self._remaps_consumed:]))
+        try:
+            out = apply_remap(
+                sg,
+                RemapDelta.merge(self.remap_deltas[self._remaps_consumed:]))
+        except RemapOverflow as exc:
+            obs_flight.trigger(
+                "remap_overflow",
+                pending_deltas=consumed - self._remaps_consumed,
+                detail=str(exc))
+            raise
         self._remaps_consumed = consumed  # only after apply_remap succeeded
         return out
 
     def snapshot(self) -> csr.Graph:
         return self.dg.snapshot()
+
+    # -- health plane ---------------------------------------------------------
+    def health(self) -> Dict[str, Any]:
+        """JSON-able health snapshot of the ingest plane: SLO burn rates
+        plus churn-state counters (same shape as
+        ``GraphServeService.health()``)."""
+        self.slo.observe("stream.ingest_lag",
+                         time.monotonic() - self._last_ingest_at)
+        h = self.slo.health()
+        h["ingest"] = {
+            "batches_applied": self.batches_applied,
+            "compactions": self.compactions,
+            "remap_deltas": len(self.remap_deltas),
+            "sssp_roots": len(self._sssp),
+        }
+        return h
 
     # -- the cachesim hook ----------------------------------------------------
     def locality(self, mode: str = "pull",

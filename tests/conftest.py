@@ -1,6 +1,13 @@
 """Shared test config.
 
-Gates the optional ``hypothesis`` dependency: when the real package is absent
+Isolates the process-global observability state: ``repro.obs`` keeps a
+module-level tracer, flight sink, metrics registry, and engine edge-map
+hook, so one test enabling any of them would leak spans/counters into every
+later test.  The autouse fixture below resets all four around EACH test —
+individual test modules must not (and no longer do) carry their own manual
+resets.
+
+Also gates the optional ``hypothesis`` dependency: when the real package is absent
 (the pinned accelerator image doesn't ship it and tier-1 must not pip
 install), install a minimal deterministic stand-in into ``sys.modules``
 BEFORE test modules import it.  The stand-in covers exactly the strategy
@@ -11,6 +18,28 @@ than real hypothesis, same assertions.
 import random
 import sys
 import types
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs_state():
+    """Every test starts and ends with tracing off, no flight recorder, a
+    fresh metrics registry, and no engine edge-map hook."""
+    from repro.apps.engine import set_edge_map_hook
+    from repro.obs import flight as obs_flight
+    from repro.obs import trace as obs_trace
+    from repro.obs.metrics import reset_registry
+
+    def _reset():
+        obs_trace.disable()
+        obs_flight.uninstall()
+        set_edge_map_hook(None)
+        reset_registry()
+
+    _reset()
+    yield
+    _reset()
 
 
 def _install_hypothesis_stub():

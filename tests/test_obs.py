@@ -25,16 +25,6 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
 from repro.obs.trace import NULL_TRACER, Tracer, load_trace, validate_trace
 
 
-@pytest.fixture(autouse=True)
-def _clean_obs_globals():
-    """Every test starts and ends with tracing off and no engine hook."""
-    obs_trace.disable()
-    set_edge_map_hook(None)
-    yield
-    obs_trace.disable()
-    set_edge_map_hook(None)
-
-
 def _rand_graph(n, e, seed, weighted=False):
     rng = np.random.default_rng(seed)
     w = rng.random(e).astype(np.float32) + 0.01 if weighted else None
@@ -179,6 +169,68 @@ def test_validate_trace_rejects_malformed():
             {"ph": "i", "name": "x", "ts": -1.0}]})  # negative ts
 
 
+# --------------------------------------------------- trace: flow/async chains
+def test_flow_and_async_events_round_trip(tmp_path):
+    tr = obs_trace.enable()
+    tr.flow_start("q", 7, cat="serve", kind="sssp")
+    tr.flow_step("q", 7, cat="serve", batch_epoch=1)
+    tr.flow_end("q", 7, cat="serve", iters=3)
+    tr.async_begin("q", 7, cat="serve")
+    tr.async_instant("q", 7, cat="serve")
+    tr.async_end("q", 7, cat="serve")
+    obs_trace.disable()
+    path = tr.save(str(tmp_path / "flow.json"))
+    doc = load_trace(path)  # load + validate: ids must chain correctly
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert phases == ["s", "t", "f", "b", "n", "e"]
+    for e in doc["traceEvents"]:
+        assert e["id"] == 7 and e["name"] == "q"
+    # the flow FINISH carries the binding point Chrome requires
+    assert doc["traceEvents"][2]["bp"] == "e"
+    # args land on the individual chain events
+    assert doc["traceEvents"][0]["args"]["kind"] == "sssp"
+    assert doc["traceEvents"][1]["args"]["batch_epoch"] == 1
+
+
+def test_validate_trace_rejects_broken_chains():
+    def ev(ph, name="q", id_=1, **kw):
+        base = {"ph": ph, "name": name, "cat": "c", "ts": 0.0,
+                "pid": 1, "tid": 1, "id": id_}
+        base.update(kw)
+        return base
+
+    # a flow step whose start is missing
+    with pytest.raises(ValueError, match="flow"):
+        validate_trace({"traceEvents": [ev("t")]})
+    # a flow finish under a DIFFERENT id than its start
+    with pytest.raises(ValueError, match="flow"):
+        validate_trace({"traceEvents": [ev("s", id_=1), ev("f", id_=2)]})
+    # an async end with no begin
+    with pytest.raises(ValueError, match="async"):
+        validate_trace({"traceEvents": [ev("e")]})
+    # id-tagged phases REQUIRE an id
+    bad = ev("s")
+    del bad["id"]
+    with pytest.raises(ValueError, match="id"):
+        validate_trace({"traceEvents": [bad]})
+    # intact chains pass
+    validate_trace({"traceEvents": [
+        ev("s"), ev("t"), ev("f", bp="e"),
+        ev("b", id_=9), ev("n", id_=9), ev("e", id_=9)]})
+
+
+def test_module_level_flow_helpers_are_noop_when_disabled():
+    obs_trace.disable()
+    # must not raise and must not record anywhere
+    obs_trace.flow_start("q", 1)
+    obs_trace.flow_step("q", 1)
+    obs_trace.flow_end("q", 1)
+    obs_trace.async_begin("q", 1)
+    obs_trace.async_instant("q", 1)
+    obs_trace.async_end("q", 1)
+    assert not obs_trace.recording()
+
+
 # ------------------------------------------------------------------- metrics
 def test_counter_and_gauge():
     c = Counter("c")
@@ -271,6 +323,31 @@ def test_edge_map_counters_traced_vs_host_passes():
     # ...true iteration counts arrive from the loop owner
     assert s["edge_map.iters.pagerank"] == int(np.asarray(iters))
     assert s["edge_map.queries.pagerank"] == 1
+    obs_counters.uninstall()
+
+
+def test_edge_map_compiles_vs_recompiles():
+    import jax
+
+    g = _rand_graph(40, 200, 7)
+    c = obs_counters.install(registry=MetricsRegistry())
+    ga = to_arrays(g)
+    pagerank(ga, max_iters=3)
+    s = c.summary()
+    # first trace of this (backend, direction, shapes) signature: a compile
+    assert s["edge_map.compiles.flat.pull"] == 1
+    assert "edge_map.recompiles.flat.pull" not in s
+    # dropping jax's compilation cache forces a RE-trace of a signature the
+    # hook has already seen — the recompilation-storm smell
+    jax.clear_caches()
+    pagerank(ga, max_iters=3)
+    s = c.summary()
+    assert s["edge_map.compiles.flat.pull"] == 1
+    assert s["edge_map.recompiles.flat.pull"] == 1
+    # compiles + recompiles account for every traced hook fire
+    assert (s["edge_map.traced_passes.flat.pull"]
+            == s["edge_map.compiles.flat.pull"]
+            + s["edge_map.recompiles.flat.pull"])
     obs_counters.uninstall()
 
 
@@ -415,7 +492,6 @@ def test_snapshot_store_gauges_and_publish_histogram():
 def test_stream_locality_sets_cachesim_gauges():
     from repro.stream.service import StreamService
 
-    reset_registry()
     g = _rand_graph(48, 300, 5)
     svc = StreamService(g)
     out = svc.locality()

@@ -1,0 +1,438 @@
+"""The PR-8 observability plane: flight recorder, SLO burn rates, health
+snapshots, causal query chains, and the bench regression gate.
+
+The acceptance property lives in ``test_breach_dump_has_complete_chain``:
+inducing a p99 SLO breach during serving must auto-dump a Perfetto-loadable
+trace that contains the offending query's COMPLETE id-linked
+submit → wait → solve → result flow chain.
+"""
+import json
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import csr
+from repro.obs import flight as obs_flight
+from repro.obs import trace as obs_trace
+from repro.obs.flight import FlightRecorder
+from repro.obs.slo import Objective, SLOTracker
+from repro.obs.trace import load_trace, validate_trace
+from repro.serve.batch import Query, QueueFull
+from repro.serve.service import GraphServeService, ServeConfig
+from repro.serve.snapshot import SnapshotStore
+
+BENCH_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks")
+sys.path.insert(0, BENCH_DIR)
+import check_regression  # noqa: E402
+
+
+def _rand_graph(n, e, seed):
+    rng = np.random.default_rng(seed)
+    return csr.from_edges(rng.integers(0, n, e), rng.integers(0, n, e), n)
+
+
+# ------------------------------------------------------------ flight recorder
+def test_ring_keeps_most_recent_events():
+    fr = FlightRecorder(capacity=8)
+    for i in range(20):
+        fr.instant(f"ev{i}", cat="t")
+    assert len(fr) == 8 and fr.total_events == 20
+    names = [e["name"] for e in fr.snapshot_events()]
+    assert names == [f"ev{i}" for i in range(12, 20)]  # oldest first
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=2, max_value=4),
+       st.integers(min_value=1, max_value=40))
+def test_ring_never_exceeds_capacity_under_concurrent_writers(
+        capacity, n_threads, per_thread):
+    fr = FlightRecorder(capacity=capacity)
+
+    def writer(tid):
+        for i in range(per_thread):
+            if i % 3 == 0:
+                with fr.span(f"s{tid}", cat="t"):
+                    pass
+            elif i % 3 == 1:
+                fr.instant(f"i{tid}", cat="t")
+            else:
+                fr.flow_start(f"f{tid}", tid * 1000 + i, cat="t")
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = n_threads * per_thread
+    assert fr.total_events == total
+    assert len(fr) == min(total, capacity)
+    assert len(fr.snapshot_events()) == len(fr)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=16),
+       st.lists(st.sampled_from(["span", "instant", "flow", "async"]),
+                min_size=0, max_size=48))
+def test_dumps_are_always_valid_traces(capacity, ops):
+    """However the ring wraps — even mid-flow-chain — the exported snapshot
+    must be a validate_trace-valid Chrome trace (orphaned steps are repaired
+    away)."""
+    fr = FlightRecorder(capacity=capacity)
+    for i, op in enumerate(ops):
+        if op == "span":
+            with fr.span(f"sp{i}", cat="t"):
+                pass
+        elif op == "instant":
+            fr.instant(f"in{i}", cat="t")
+        elif op == "flow":
+            fr.flow_start("chain", i, cat="t")
+            fr.flow_step("chain", i, cat="t")
+            fr.flow_end("chain", i, cat="t")
+        else:
+            fr.async_begin("op", i, cat="t")
+            fr.async_end("op", i, cat="t")
+    validate_trace(fr.export())  # raises on any dangling chain
+
+
+def test_dump_file_is_load_trace_valid(tmp_path):
+    fr = FlightRecorder(capacity=4)  # small enough to orphan a flow start
+    for i in range(6):
+        fr.flow_start("chain", i, cat="t")
+        fr.flow_step("chain", i, cat="t")
+        fr.flow_end("chain", i, cat="t")
+    path = fr.dump(str(tmp_path / "ring.json"))
+    doc = load_trace(path)
+    validate_trace(doc)
+    # the wrapped-off start's dangling step/finish were repaired away but
+    # the newest complete chain survived
+    assert any(e["ph"] == "s" for e in doc["traceEvents"])
+
+
+def test_trigger_cooldown_and_module_level_dispatch(tmp_path):
+    fr = obs_flight.install(capacity=64, dump_dir=str(tmp_path),
+                            cooldown_s=1e6)
+    assert obs_flight.get_flight() is fr
+    p1 = obs_flight.trigger("queue_full", depth=3)
+    p2 = obs_flight.trigger("queue_full", depth=4)  # inside cooldown
+    p3 = obs_flight.trigger("slo_breach")           # different reason: dumps
+    assert p1 is not None and os.path.exists(p1)
+    assert p2 is None
+    assert p3 is not None and p3 != p1
+    # every trigger leaves its anomaly marker even when the dump is gated
+    marks = [e for e in fr.snapshot_events()
+             if e["name"] == "flight.anomaly"]
+    assert [m["args"]["reason"] for m in marks] == \
+        ["queue_full", "queue_full", "slo_breach"]
+    assert obs_flight.uninstall() is fr
+    assert obs_flight.trigger("queue_full") is None  # no-op when unarmed
+
+
+def test_flight_tees_from_enabled_tracer():
+    fr = obs_flight.install(capacity=32)
+    tr = obs_trace.enable()
+    with obs_trace.span("both", cat="t"):
+        pass
+    obs_trace.disable()
+    with obs_trace.span("ring_only", cat="t"):
+        pass
+    names_full = [e["name"] for e in tr.export()["traceEvents"]]
+    names_ring = [e["name"] for e in fr.snapshot_events()]
+    assert names_full == ["both"]           # full tracer stops at disable()
+    assert names_ring == ["both", "ring_only"]  # ring never stops
+    obs_flight.uninstall()
+
+
+# ------------------------------------------------------------------ SLO plane
+def test_quantile_objective_burn_math():
+    t = {"now": 0.0}
+    slo = SLOTracker([Objective("lat", kind="quantile", target=1.0,
+                                quantile=0.9, windows=(10.0,))],
+                     clock=lambda: t["now"])
+    for _ in range(8):
+        slo.observe("lat", 0.5)
+    for _ in range(2):
+        slo.observe("lat", 2.0)
+    ev = slo.evaluate("lat")
+    w = ev["windows"]["10s"]
+    assert w["events"] == 10 and w["bad_fraction"] == pytest.approx(0.2)
+    # 20% bad against a 10% budget: burn rate 2, breached
+    assert w["burn_rate"] == pytest.approx(2.0)
+    assert ev["breached"] and slo.breached("lat")
+    # events age out of the window and the objective recovers
+    t["now"] = 11.0
+    assert not slo.breached("lat")
+
+
+def test_rate_and_value_objective_burn_math():
+    slo = SLOTracker([
+        Objective("rej", kind="rate", target=0.25, windows=(60.0,)),
+        Objective("stale", kind="value", target=10.0, windows=(60.0,)),
+    ], clock=lambda: 0.0)
+    for ok in (True, True, True, False):  # 25% bad = exactly at budget
+        slo.observe_ok("rej", ok)
+    assert slo.evaluate("rej")["worst_burn"] == pytest.approx(1.0)
+    assert slo.breached("rej")  # burn >= 1 in every window with data
+    slo.observe("stale", 5.0)
+    assert slo.evaluate("stale")["worst_burn"] == pytest.approx(0.5)
+    assert not slo.breached("stale")
+    slo.observe("stale", 30.0)  # worst sample in window counts
+    assert slo.evaluate("stale")["worst_burn"] == pytest.approx(3.0)
+
+
+def test_multi_window_rule_needs_every_window_burning():
+    t = {"now": 100.0}
+    slo = SLOTracker([Objective("lat", kind="quantile", target=1.0,
+                                quantile=0.5, windows=(5.0, 100.0))],
+                     clock=lambda: t["now"])
+    # an OLD burst of bad events: long window burns, short window is clean
+    for _ in range(4):
+        slo.observe("lat", 9.0)
+    t["now"] = 150.0
+    for _ in range(4):
+        slo.observe("lat", 0.1)
+    ev = slo.evaluate("lat")
+    # the long window still holds the burst and burns...
+    assert ev["windows"]["100s"]["burn_rate"] >= 1.0
+    # ...but the short window only sees recent good events, so the
+    # multi-window rule says "was real, no longer happening": not breached
+    assert ev["windows"]["5s"]["burn_rate"] == 0.0
+    assert not ev["breached"]
+
+
+def test_on_breach_is_edge_triggered():
+    fired = []
+    slo = SLOTracker([Objective("lat", kind="quantile", target=1.0,
+                                quantile=0.5, windows=(1e9,))],
+                     clock=lambda: 0.0,
+                     on_breach=lambda name, info: fired.append((name, info)))
+    slo.observe("lat", 5.0, context={"qid": 42})
+    slo.observe("lat", 5.0, context={"qid": 43})  # still breached: no refire
+    assert len(fired) == 1
+    name, info = fired[0]
+    assert name == "lat" and info["breached"]
+    assert info["context"] == {"qid": 42}  # the FIRST breaching observation
+
+
+def test_unknown_and_wrong_kind_observations_raise():
+    slo = SLOTracker([Objective("r", kind="rate", target=0.1)])
+    with pytest.raises(KeyError):
+        slo.observe("nope", 1.0)
+    with pytest.raises(TypeError):
+        slo.observe("r", 1.0)       # rate kind needs observe_ok
+    with pytest.raises(ValueError):
+        Objective("x", kind="median", target=1.0)
+    with pytest.raises(ValueError):
+        Objective("x", kind="quantile", target=0.0)
+
+
+def test_health_snapshot_is_jsonable():
+    slo = SLOTracker([Objective("a", kind="value", target=1.0),
+                      Objective("b", kind="rate", target=0.5)])
+    slo.observe("a", 2.0)
+    h = slo.health()
+    json.dumps(h)
+    assert h["status"] == "breached"
+    assert set(h["objectives"]) == {"a", "b"}
+
+
+# ----------------------------------------------- service/stream health planes
+def test_serve_health_shape_and_stream_health():
+    g = _rand_graph(48, 300, 0)
+    svc = GraphServeService(g, ServeConfig(max_width=2, pr_max_iters=5))
+    svc.submit(Query(kind="pagerank"))
+    svc.submit(Query(kind="pagerank"))
+    svc.drain()
+    h = svc.health()
+    json.dumps(h)
+    assert set(h["objectives"]) == {"serve.latency", "serve.rejection_rate",
+                                    "serve.snapshot_staleness"}
+    assert h["queue"]["submitted"] == 2 and h["queue"]["depth"] == 0
+    assert h["snapshots"]["version"] == 0
+    assert h["snapshots"]["batch_epoch"] == 1
+    sh = svc.stream.health()
+    json.dumps(sh)
+    assert set(sh["objectives"]) == {"stream.ingest_seconds",
+                                     "stream.ingest_lag"}
+    assert sh["ingest"]["batches_applied"] == 0
+
+
+def test_queue_full_triggers_flight_dump(tmp_path):
+    fr = obs_flight.install(capacity=128, dump_dir=str(tmp_path),
+                            cooldown_s=0.0)
+    g = _rand_graph(48, 300, 1)
+    svc = GraphServeService(g, ServeConfig(max_width=1, max_depth=1))
+    svc.submit(Query(kind="pagerank"))
+    with pytest.raises(QueueFull):
+        svc.submit(Query(kind="pagerank"))
+    dumps = [t for t in fr.triggers if t["reason"] == "queue_full"]
+    assert len(dumps) == 1
+    files = [f for f in os.listdir(str(tmp_path)) if "queue_full" in f]
+    assert len(files) == 1
+    validate_trace(load_trace(os.path.join(str(tmp_path), files[0])))
+    obs_flight.uninstall()
+
+
+def test_breach_dump_has_complete_chain(tmp_path):
+    """ACCEPTANCE: an induced p99 breach auto-dumps a Perfetto-loadable
+    trace holding the offending query's complete id-linked
+    submit → wait → solve → result flow chain."""
+    obs_flight.install(capacity=512, dump_dir=str(tmp_path), cooldown_s=0.0)
+    g = _rand_graph(48, 300, 2)
+    # any successfully answered query violates a 1ns latency objective
+    svc = GraphServeService(g, ServeConfig(
+        max_width=2, pr_max_iters=5, slo_latency_p99_s=1e-9))
+    qids = [svc.submit(Query(kind="pagerank")) for _ in range(2)]
+    results = svc.drain()
+    assert len(results) == 2
+    files = [f for f in os.listdir(str(tmp_path)) if "slo_breach" in f]
+    assert len(files) == 1, "exactly one dump for the first breach"
+    doc = load_trace(os.path.join(str(tmp_path), files[0]))
+    validate_trace(doc)
+
+    # the anomaly marker names the breaching query
+    anomaly = next(e for e in doc["traceEvents"]
+                   if e["name"] == "flight.anomaly")
+    bad_qid = anomaly["args"]["qid"]
+    assert bad_qid in qids
+    assert anomaly["args"]["objective"] == "serve.latency"
+    assert "batch_epoch" in anomaly["args"]
+    assert "snapshot_version" in anomaly["args"]
+
+    # ...and its COMPLETE flow chain is in the dump: start at submit, step
+    # at batch dispatch (stamped with epoch + version), finish at result
+    chain = [e for e in doc["traceEvents"]
+             if e.get("id") == bad_qid and e["name"] == "serve.query"
+             and e["ph"] in ("s", "t", "f")]
+    assert [e["ph"] for e in chain] == ["s", "t", "f"]
+    assert chain[1]["args"]["batch_epoch"] == 1
+    assert chain[1]["args"]["snapshot_version"] == 0
+    # the async span envelope travels under the same id too
+    spans = {e["ph"] for e in doc["traceEvents"]
+             if e.get("id") == bad_qid and e["name"] == "serve.query"}
+    assert {"b", "e"} <= spans
+    # the engine work the query rode through is present alongside
+    assert any(e["name"].startswith("engine.solve") and e["ph"] == "X"
+               for e in doc["traceEvents"])
+    obs_flight.uninstall()
+
+
+def test_cancel_closes_the_flow_chain():
+    fr = obs_flight.install(capacity=64)
+    g = _rand_graph(48, 300, 3)
+    svc = GraphServeService(g, ServeConfig(max_width=4))
+    qid = svc.submit(Query(kind="pagerank"))
+    assert svc.cancel(qid)
+    phases = [e["ph"] for e in fr.snapshot_events()
+              if e.get("id") == qid and e["name"] == "serve.query"]
+    assert phases == ["s", "b", "f", "e"]  # started, then ended by cancel
+    ends = [e for e in fr.snapshot_events()
+            if e.get("id") == qid and e["ph"] == "f"]
+    assert ends[0]["args"]["cancelled"] is True
+    obs_flight.uninstall()
+
+
+def test_snapshot_store_reclaim_stall_triggers():
+    fr = obs_flight.install(capacity=64, cooldown_s=0.0)
+    g = _rand_graph(16, 60, 4)
+    store = SnapshotStore(g, stall_threshold=2)
+    pinned = [store.acquire()]
+    for _ in range(2):  # retire versions while a reader still pins them
+        store.publish(g)
+        pinned.append(store.acquire())
+    assert not [t for t in fr.triggers if t["reason"] == "reclaim_stall"]
+    store.publish(g)  # third retired-but-pinned version crosses threshold=2
+    stalls = [t for t in fr.triggers if t["reason"] == "reclaim_stall"]
+    assert len(stalls) == 1
+    assert stalls[0]["context"]["retired_pinned"] == 3
+    for s in pinned:
+        store.release(s)
+    assert store.live_versions == 1  # releases drain the backlog
+    obs_flight.uninstall()
+
+
+# ------------------------------------------------------- bench regression gate
+def _serve_doc():
+    return {
+        "schema": 1,
+        "dataset": "kr",
+        "cells": [{
+            "width": 1, "qps": 50.0, "latency_p50_ms": 10.0,
+            "latency_p99_ms": 20.0, "occupancy": 1.0, "batches": 8,
+            "counters": {"edge_map.traced_passes.flat.pull": 1,
+                         "edge_map.compiles.flat.pull": 1,
+                         "edge_map.iters.pagerank": 100},
+            "health": {"status": "ok"},
+        }],
+        "summary": {"qps_by_width": {"1": 50.0},
+                    "widest_over_serial_qps": 1.0},
+    }
+
+
+def test_gate_passes_identical_and_tolerates_timing_noise():
+    base = _serve_doc()
+    assert check_regression.check("serve", base, _serve_doc()) == []
+    fresh = _serve_doc()
+    fresh["cells"][0]["qps"] = 120.0            # < 4x band
+    fresh["cells"][0]["latency_p99_ms"] = 55.0  # < 4x band
+    fresh["cells"][0]["health"] = {"status": "breached"}  # ignored
+    fresh["cells"][0]["counters"]["edge_map.iters.pagerank"] = 110  # < 25%
+    assert check_regression.check("serve", base, fresh) == []
+
+
+def test_gate_fails_on_extra_edge_map_pass_and_timing_cliff():
+    base = _serve_doc()
+    fresh = _serve_doc()
+    fresh["cells"][0]["counters"]["edge_map.traced_passes.flat.pull"] += 1
+    v = check_regression.check("serve", base, fresh)
+    assert len(v) == 1 and "traced_passes" in v[0]
+
+    fresh = _serve_doc()
+    fresh["cells"][0]["qps"] = 5000.0  # outside even the wide wall-clock band
+    assert any("qps" in x for x in check_regression.check("serve", base,
+                                                          fresh))
+
+
+def test_gate_fails_on_dropped_counter_column_and_schema_drift():
+    base = _serve_doc()
+    fresh = _serve_doc()
+    del fresh["cells"][0]["counters"]["edge_map.compiles.flat.pull"]
+    v = check_regression.check("serve", base, fresh)
+    assert any("missing key" in x for x in v)
+
+    fresh = _serve_doc()
+    fresh["schema"] = 2
+    with pytest.raises(check_regression.SchemaError):
+        check_regression.check("serve", base, fresh)
+    with pytest.raises(check_regression.SchemaError):
+        check_regression.check("nope", base, _serve_doc())
+
+
+def test_gate_cli_round_trip(tmp_path):
+    base_p = str(tmp_path / "base.json")
+    fresh_p = str(tmp_path / "fresh.json")
+    with open(base_p, "w") as f:
+        json.dump(_serve_doc(), f)
+    with open(fresh_p, "w") as f:
+        json.dump(_serve_doc(), f)
+    assert check_regression.main(["serve", base_p, fresh_p]) == 0
+    bad = _serve_doc()
+    bad["cells"][0]["counters"]["edge_map.traced_passes.flat.pull"] = 99
+    with open(fresh_p, "w") as f:
+        json.dump(bad, f)
+    assert check_regression.main(["serve", base_p, fresh_p]) == 1
+
+
+def test_committed_baselines_are_current_schema():
+    for name in ("BENCH_serve_smoke.json", "BENCH_apps_smoke.json"):
+        path = os.path.join(BENCH_DIR, "baselines", name)
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc["schema"] == check_regression.SCHEMA, \
+            f"{name} needs regenerating against the current bench scripts"
