@@ -203,11 +203,22 @@ def main() -> None:
 
     out = {"schema": 1, "scale": args.scale, "orderings": orderings,
            "cells": []}
+    from repro.tune import plan as tplan
+
     for key in keys:
         g = datasets.load(key, args.scale, seed=0)
         gw = datasets.load_weighted(key, args.scale, seed=0)
         cell = {"dataset": key, "vertices": g.num_vertices,
                 "edges": g.num_edges, "orderings": {}}
+        # best-known-config column: what backend="auto" (the committed
+        # PLAN_tuned.json, benchmarks/autotune.py) resolves for this graph
+        active = tplan.get_active_plan()
+        if active is not None:
+            _, family = active.lookup(tplan.graph_features(g))
+            cell["best_known"] = {"family": family,
+                                  "config": tplan.auto_config(g)}
+        else:
+            cell["best_known"] = None
         for ordering in orderings:
             if ordering == "original":
                 g2, gw2 = g, gw

@@ -21,10 +21,15 @@ from .engine import (edge_map_pull, edge_map_push, out_edge_sum,
 __all__ = ["bc"]
 
 
-@partial(jax.jit, static_argnames=("max_iters", "direction_optimizing"))
+@partial(jax.jit, static_argnames=("max_iters", "direction_optimizing",
+                                   "density_threshold"))
 def bc(ga, root: jnp.ndarray, *, max_iters: int = 0,
-       direction_optimizing: bool = True):
-    """Returns (centrality, dist, num_levels) for a single root."""
+       direction_optimizing: bool = True,
+       density_threshold: float = None):
+    """Returns (centrality, dist, num_levels) for a single root.
+
+    ``density_threshold`` (static) overrides the engine's pull/push switch
+    point; results are bitwise invariant to it (traffic choice only)."""
     v = ga.in_deg.shape[0]
     max_iters = max_iters or v
 
@@ -51,7 +56,8 @@ def bc(ga, root: jnp.ndarray, *, max_iters: int = 0,
         contrib = jnp.where(frontier, sigma, 0.0)
         if direction_optimizing:
             sig_new = switch_by_density(ga, frontier, pull_step, push_step,
-                                        (contrib, frontier))
+                                        (contrib, frontier),
+                                        threshold=density_threshold)
         else:
             sig_new = pull_step((contrib, frontier))
         reached = sig_new > 0.0

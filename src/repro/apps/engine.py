@@ -376,23 +376,45 @@ def _build_ell(g: csr.Graph, *, row_tile: int = 64, width_tile: int = 128,
 
 
 def _build_packed(g: csr.Graph, *, row_tile: int = 64, width_tile: int = 128,
-                  interpret: bool = True):
+                  interpret: bool = True, slot_align: int = 16,
+                  hot_groups: int = 0):
     from ..pack.engine import packed_backend
     from ..pack.layout import pack_graph
 
-    return packed_backend(pack_graph(g), row_tile=row_tile,
+    pg = pack_graph(g, slot_align=slot_align,
+                    hot_groups=hot_groups if hot_groups > 0 else None,
+                    rows_per_block=row_tile)
+    return packed_backend(pg, row_tile=row_tile,
                           width_tile=width_tile, interpret=interpret)
 
 
-#: name -> builder(g, *, row_tile, width_tile, interpret).  ``to_arrays``,
-#: the sharded engine (``repro.dist.graph``) and the benchmarks all resolve
-#: backend names through this one table; extend it rather than matching
-#: strings locally.
+def _build_auto(g: csr.Graph, *, app: Optional[str] = None, plan=None,
+                **overrides):
+    """``backend="auto"``: resolve the tuned execution plan for ``g``
+    (``repro.tune.plan``) and build the backend it names.  Explicit kwargs
+    override the plan; knobs the resolved backend does not consume are
+    dropped silently (the plan may carry ELL geometry while resolving a
+    graph to ``flat``)."""
+    from ..tune import plan as tune_plan
+    from ..tune import space as tune_space
+
+    name, cfg = tune_plan.resolve_auto(g, app=app, plan=plan)
+    cfg.update({k: v for k, v in overrides.items() if v is not None})
+    accepted, _ignored = tune_space.validate_knobs(name, cfg)
+    return resolve_backend(name)(g, **accepted)
+
+
+#: name -> builder(g, **knobs).  ``to_arrays``, the sharded engine
+#: (``repro.dist.graph``) and the benchmarks all resolve backend names
+#: through this one table; extend it rather than matching strings locally.
+#: The knobs each builder consumes are declared in
+#: ``repro.tune.space.BACKEND_KNOBS`` — keep the two tables in sync.
 BACKENDS: Dict[str, Callable] = {
     "flat": _build_flat,      # edge-parallel oracle (gather/segment/scatter)
     "ell": _build_ell,        # fused Pallas kernels over DBG-ELL tiles
     "packed": _build_packed,  # fused kernels straight over pack.PackedGraph
     "arrays": _build_arrays,  # raw GraphArrays (the dist/stream substrate)
+    "auto": _build_auto,      # plan-resolved (repro.tune) concrete backend
 }
 
 
@@ -410,24 +432,41 @@ def to_arrays(
     g: csr.Graph,
     *,
     backend: str = "flat",
-    row_tile: int = 64,
-    width_tile: int = 128,
-    interpret: bool = True,
+    strict: bool = False,
+    **knobs,
 ):
     """Build an edge-map backend for ``g`` (resolved through ``BACKENDS``).
 
     ``backend="flat"`` (default) keeps the edge-parallel oracle path;
     ``"ell"`` packs the in-direction into per-DBG-group ELL tiles and routes
-    every edge map through the fused Pallas kernels; ``"packed"`` packs ``g``
-    into hot/cold segmented storage (``repro.pack``) and runs the same fused
-    kernels straight over the slot tables; ``"arrays"`` returns the raw
-    ``GraphArrays`` (the dist/stream substrate).
+    every edge map through the fused Pallas kernels (``row_tile`` /
+    ``width_tile`` / ``interpret``); ``"packed"`` packs ``g`` into hot/cold
+    segmented storage (``repro.pack``, plus ``slot_align`` / ``hot_groups``)
+    and runs the same fused kernels straight over the slot tables;
+    ``"arrays"`` returns the raw ``GraphArrays`` (the dist/stream
+    substrate); ``"auto"`` resolves the active tuned execution plan
+    (``repro.tune``) — falling back to the hand-tuned defaults when no plan
+    matches — and builds the backend it names (optionally per-``app``).
+
+    Knob kwargs are validated against ``repro.tune.space.BACKEND_KNOBS``:
+    unknown names always raise; knobs the chosen backend does not consume
+    warn and are dropped (a tile-geometry kwarg on ``flat`` used to be a
+    silent no-op), or raise with ``strict=True``.
     """
+    from ..tune.space import validate_knobs
+
+    accepted, ignored = validate_knobs(backend, knobs, strict=strict)
+    if ignored:
+        import warnings
+        warnings.warn(
+            f"to_arrays(backend={backend!r}): ignoring knob(s) "
+            f"{sorted(ignored)} — not consumed by this backend "
+            "(pass strict=True to make this an error)",
+            stacklevel=2)
     with obs_trace.span("engine.build_backend", cat="engine",
                         backend=backend, vertices=g.num_vertices,
                         edges=g.num_edges):
-        return resolve_backend(backend)(
-            g, row_tile=row_tile, width_tile=width_tile, interpret=interpret)
+        return resolve_backend(backend)(g, **accepted)
 
 
 # ---------------------------------------------------------------------------
@@ -515,14 +554,22 @@ def frontier_density(ga, frontier: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(jnp.where(frontier, ga.out_deg, 0)) / e
 
 
-# Ligra's heuristic: go pull once the frontier touches > E/20 edges.  One
-# constant for every direction-optimizing app (SSSP, BC) — the switch is a
-# traffic choice, both directions reduce the identical edge set.
+# Ligra's heuristic: go pull once the frontier touches > E/20 edges.  The
+# fallback for every direction-optimizing app (SSSP, BC, serve.batched) —
+# now a per-plan tunable (``repro.tune``'s ``density_threshold`` knob): the
+# switch is a traffic choice, both directions reduce the identical edge set,
+# so any threshold yields bitwise-identical results at different cost.
 DENSITY_THRESHOLD = 0.05
 
 
-def switch_by_density(ga, frontier, pull_step, push_step, operand):
-    """``lax.cond`` on :func:`frontier_density`: dense → pull, sparse → push."""
+def switch_by_density(ga, frontier, pull_step, push_step, operand,
+                      threshold: Optional[float] = None):
+    """``lax.cond`` on :func:`frontier_density`: dense → pull, sparse → push.
+
+    ``threshold`` (static) overrides :data:`DENSITY_THRESHOLD`; tuned plans
+    thread their ``density_threshold`` knob through the apps to here."""
+    if threshold is None:
+        threshold = DENSITY_THRESHOLD
     return jax.lax.cond(
-        frontier_density(ga, frontier) > DENSITY_THRESHOLD,
+        frontier_density(ga, frontier) > threshold,
         pull_step, push_step, operand)

@@ -19,14 +19,19 @@ from .engine import edge_map_pull, edge_map_push, switch_by_density
 __all__ = ["sssp"]
 
 
-@partial(jax.jit, static_argnames=("max_iters", "direction_optimizing"))
+@partial(jax.jit, static_argnames=("max_iters", "direction_optimizing",
+                                   "density_threshold"))
 def sssp(ga, root: jnp.ndarray, *, max_iters: int = 0,
-         direction_optimizing: bool = True):
+         direction_optimizing: bool = True,
+         density_threshold: float = None):
     """Returns (dist, iterations). Unreachable vertices keep +inf.
 
     Relaxations only from the changed frontier (Ligra semantics): each round,
     active sources push dist[src] + w to out-neighbors with a min-scatter, or
     — when the frontier is dense — destinations pull the same relaxation.
+    ``density_threshold`` (static; tuned plans set it) overrides the engine's
+    Ligra-default switch point; any value is bit-identical, only traffic
+    differs.
     """
     v = ga.in_deg.shape[0]
     max_iters = max_iters or v  # Bellman-Ford bound
@@ -58,7 +63,8 @@ def sssp(ga, root: jnp.ndarray, *, max_iters: int = 0,
         dist, frontier, it = state
         if direction_optimizing:
             cand = switch_by_density(ga, frontier, pull_step, push_step,
-                                     (dist, frontier))
+                                     (dist, frontier),
+                                     threshold=density_threshold)
         else:
             cand = push_step((dist, frontier))
         frontier = cand < dist

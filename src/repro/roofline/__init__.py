@@ -1,1 +1,2 @@
-from .analysis import HW, model_flops, parse_collective_bytes, roofline_terms  # noqa: F401
+from .analysis import (HW, HW_PROFILES, model_flops,  # noqa: F401
+                       parse_collective_bytes, roofline_terms)

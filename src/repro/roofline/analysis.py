@@ -16,17 +16,65 @@ condition's comparison constant).
 from __future__ import annotations
 
 import dataclasses
+import math
+import os
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HW", "parse_collective_bytes", "roofline_terms", "model_flops"]
+__all__ = ["HW", "HW_PROFILES", "parse_collective_bytes", "roofline_terms",
+           "model_flops"]
 
 
 @dataclasses.dataclass(frozen=True)
 class HW:
+    """A hardware roofline profile.
+
+    Defaults are TPU v5e, but the profile is selectable: ``HW.profile()``
+    resolves the ``REPRO_HW_PROFILE`` env var (falling back to ``"v5e"``),
+    and ``repro.tune.cost`` routes every candidate price through it — under
+    ``"cpu-interpret"`` (the Pallas interpreter on host CPU) the FLOP peak
+    is infinite, so rankings degrade gracefully to modeled HBM bytes
+    instead of comparing against a 197-TFLOP peak no interpreter will see.
+
+    ``dispatch_overhead`` is the fixed cost of one Pallas grid step.  On
+    real hardware grid steps are pipelined and it is ~0; the interpreter
+    executes each grid cell as a Python-level call, so there it DOMINATES
+    small-graph wall clock (tens of µs per step — calibrated against the
+    measured sweep's audit trail) and tile-geometry rankings that ignore
+    it are wrong in exactly the way a pure byte model is wrong.
+    """
+
     peak_flops: float = 197e12  # bf16 / chip (TPU v5e)
     hbm_bw: float = 819e9  # bytes/s
     link_bw: float = 50e9  # bytes/s per ICI link
+    dispatch_overhead: float = 0.0  # s per kernel grid step
+    name: str = "v5e"
+
+    @classmethod
+    def profile(cls, name: Optional[str] = None) -> "HW":
+        """Look up a named profile; ``None`` reads ``REPRO_HW_PROFILE``
+        (default ``"v5e"``).  Unknown names raise with the known list."""
+        if name is None:
+            name = os.environ.get("REPRO_HW_PROFILE", "v5e")
+        try:
+            return HW_PROFILES[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown hardware profile {name!r}; known profiles: "
+                f"{', '.join(sorted(HW_PROFILES))}") from None
+
+
+#: name -> profile.  ``cpu-interpret`` models the interpret-mode sweeps the
+#: benchmarks run on CI hosts: ~host-DRAM bandwidth, no meaningful FLOP or
+#: interconnect peak (both infinite), and a per-grid-step dispatch cost —
+#: the Python-level interpreter loop — that dominates small-graph wall
+#: clock (~50 µs/step, calibrated on the registry sweeps' audit trails),
+#: so tile geometry ranks by bytes + dispatch instead of bytes alone.
+HW_PROFILES: Dict[str, HW] = {
+    "v5e": HW(),
+    "cpu-interpret": HW(peak_flops=math.inf, hbm_bw=20e9, link_bw=math.inf,
+                        dispatch_overhead=5e-5, name="cpu-interpret"),
+}
 
 
 _DTYPE_BYTES = {

@@ -83,13 +83,15 @@ def batched_pagerank(
     return rank, iters
 
 
-@partial(jax.jit, static_argnames=("max_iters", "direction_optimizing"))
+@partial(jax.jit, static_argnames=("max_iters", "direction_optimizing",
+                                   "density_threshold"))
 def batched_sssp(
     ga,
     roots: jnp.ndarray,  # (K,) int32 source vertices
     *,
     max_iters: int = 0,
     direction_optimizing: bool = True,
+    density_threshold: float = None,
 ):
     """K SSSP roots in one fused edge map per iteration.
 
@@ -131,7 +133,9 @@ def batched_sssp(
         dist, frontier, it, iters = state
         if direction_optimizing:
             cand = jax.lax.cond(
-                batch_frontier_density(ga, frontier) > DENSITY_THRESHOLD,
+                batch_frontier_density(ga, frontier) >
+                (DENSITY_THRESHOLD if density_threshold is None
+                 else density_threshold),
                 pull_step, push_step, (dist, frontier))
         else:
             cand = push_step((dist, frontier))

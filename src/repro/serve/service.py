@@ -65,11 +65,15 @@ class ServeConfig:
     deadline: float = 0.0    # seconds a partial batch may wait to fill
     # snapshot cadence
     publish_every: int = 1   # ingest batches between snapshot publishes
-    # edge-map backend for query batches (engine.BACKENDS name)
+    # edge-map backend for query batches (engine.BACKENDS name; "auto"
+    # resolves the active repro.tune plan per snapshot + query kind)
     backend: str = "flat"
     row_tile: int = 64
     width_tile: int = 128
     interpret: bool = True
+    # pull/push switch point for batched SSSP; None = engine default or,
+    # under backend="auto", whatever the resolved plan tuned
+    density_threshold: Optional[float] = None
     # app parameters
     damping: float = 0.85
     pr_tol: float = 1e-7
@@ -211,12 +215,37 @@ class GraphServeService:
             out.extend(self._run_batch(batch))
 
     # -- batch execution ----------------------------------------------------
-    def _backend(self, snap: Snapshot):
+    def _backend(self, snap: Snapshot, kind: Optional[str] = None):
         cfg = self.config
-        key = f"backend:{cfg.backend}:{cfg.row_tile}:{cfg.width_tile}"
+        from ..tune.space import validate_knobs
+        if cfg.backend == "auto":
+            # the plan owns the tile geometry; only the execution mode and
+            # the per-app resolution hint come from serve config
+            app = {"pagerank": "pr"}.get(kind, kind)
+            knobs = {"interpret": cfg.interpret, "app": app}
+            key = f"backend:auto:{app}:{cfg.interpret}"
+        else:
+            # filter through the constraint table so flat/arrays do not trip
+            # the ignored-knob warning on the tile-geometry defaults
+            knobs, _ = validate_knobs(cfg.backend, {
+                "row_tile": cfg.row_tile, "width_tile": cfg.width_tile,
+                "interpret": cfg.interpret})
+            key = f"backend:{cfg.backend}:{cfg.row_tile}:{cfg.width_tile}"
         return snap.cached(key, lambda g: to_arrays(
-            g, backend=cfg.backend, row_tile=cfg.row_tile,
-            width_tile=cfg.width_tile, interpret=cfg.interpret))
+            g, backend=cfg.backend, **knobs))
+
+    def _sssp_threshold(self, snap: Snapshot) -> Optional[float]:
+        """Pull/push switch point for batched SSSP on this snapshot: the
+        explicit config wins, else the tuned plan's (backend="auto"), else
+        the engine default."""
+        if self.config.density_threshold is not None:
+            return self.config.density_threshold
+        if self.config.backend != "auto":
+            return None
+        from ..tune import plan as tune_plan
+        return snap.cached("tune:sssp_threshold", lambda g: tune_plan
+                           .auto_config(g, app="sssp")
+                           .get("density_threshold"))
 
     def _teleport_plane(self, v: int, batch: List[PendingQuery]) -> np.ndarray:
         p = np.zeros((v, len(batch)), np.float32)
@@ -248,7 +277,7 @@ class GraphServeService:
                     obs_trace.flow_step("serve.query", pq.qid, cat="serve",
                                         batch_epoch=epoch,
                                         snapshot_version=snap.version)
-                ga = self._backend(snap)
+                ga = self._backend(snap, kind)
                 v = snap.graph.num_vertices
                 with obs_trace.span(f"engine.solve.{kind}", cat="engine",
                                     width=len(batch), batch_epoch=epoch,
@@ -263,7 +292,8 @@ class GraphServeService:
                         roots = jnp.asarray([pq.query.root for pq in batch],
                                             jnp.int32)
                         vals, iters = batched_sssp(
-                            ga, roots, max_iters=cfg.sssp_max_iters)
+                            ga, roots, max_iters=cfg.sssp_max_iters,
+                            density_threshold=self._sssp_threshold(snap))
                     vals = np.asarray(jax.block_until_ready(vals))
                     iters = np.asarray(iters)
                     solve_sp.add(iters=int(iters.sum()))

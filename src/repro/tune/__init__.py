@@ -1,0 +1,33 @@
+"""repro.tune — cost-ranked, sweep-driven autotuned execution plans.
+
+The tuner closes the loop the paper opens: which layout/geometry wins is a
+property of the graph (skew, hub mass, scale), not of the code.  Four
+pieces:
+
+  * :mod:`~repro.tune.space`  — the declarative knob space + the per-backend
+    constraint table ``apps.engine.to_arrays`` validates against;
+  * :mod:`~repro.tune.cost`   — analytic pre-ranker (the repo's own byte
+    models through :class:`repro.roofline.HW`), prunes the space to a
+    shortlist without running anything;
+  * :mod:`~repro.tune.search` — measured successive-halving sweep over the
+    shortlist, full audit trail, honesty probes;
+  * :mod:`~repro.tune.plan`   — the persisted, schema-versioned
+    ``ExecutionPlan`` that ``to_arrays(backend="auto")`` resolves, keyed by
+    graph-family features with a hand-tuned-default fallback.
+
+``benchmarks/autotune.py`` drives the whole loop over the dataset registry
+and writes ``PLAN_tuned.json`` + ``BENCH_tune.json``.
+"""
+from .cost import (APP_PROFILES, GraphCost, PassProfile, Scored,  # noqa: F401
+                   app_bytes, app_seconds, config_key, default_budget,
+                   pass_bytes, rank, shortlist)
+from .plan import (PLAN_SCHEMA, ExecutionPlan, PlanEntry,  # noqa: F401
+                   PlanError, auto_config, build_plan, default_plan_path,
+                   feature_distance, get_active_plan, graph_features,
+                   resolve_auto, set_active_plan)
+from .search import (SweepResult, Trial, measure,  # noqa: F401
+                     refine_density_threshold, sweep)
+from .space import (BACKEND_KNOBS, DEFAULT_CONFIG, KNOB_SCOPES,  # noqa: F401
+                    Choice, FloatRange, IntRange, ParamSpace, backend_knobs,
+                    canonical, engine_space, full_space, split_config,
+                    validate_knobs)

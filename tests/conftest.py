@@ -25,21 +25,26 @@ import pytest
 @pytest.fixture(autouse=True)
 def _clean_obs_state():
     """Every test starts and ends with tracing off, no flight recorder, a
-    fresh metrics registry, and no engine edge-map hook."""
+    fresh metrics registry, no engine edge-map hook, and tuned execution
+    plans DISABLED (``backend="auto"`` falls back to the hand-tuned
+    defaults) — tests must opt into a plan explicitly, never inherit the
+    committed ``PLAN_tuned.json``."""
     from repro.apps.engine import set_edge_map_hook
     from repro.obs import flight as obs_flight
     from repro.obs import trace as obs_trace
     from repro.obs.metrics import reset_registry
+    from repro.tune import plan as tune_plan
 
-    def _reset():
+    def _reset(plan):
         obs_trace.disable()
         obs_flight.uninstall()
         set_edge_map_hook(None)
         reset_registry()
+        tune_plan.set_active_plan(plan)
 
-    _reset()
+    _reset(None)
     yield
-    _reset()
+    _reset(tune_plan._UNSET)  # restore normal plan discovery after the test
 
 
 def _install_hypothesis_stub():
