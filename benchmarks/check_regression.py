@@ -27,6 +27,7 @@ Usage:
   python benchmarks/check_regression.py serve baselines/BENCH_serve_smoke.json /tmp/BENCH_serve.json
   python benchmarks/check_regression.py apps  baselines/BENCH_apps_smoke.json  /tmp/BENCH_apps.json
   python benchmarks/check_regression.py tune  baselines/BENCH_tune_smoke.json  /tmp/BENCH_tune.json
+  python benchmarks/check_regression.py stream baselines/BENCH_stream_smoke.json /tmp/BENCH_stream.json
 
 Exit codes: 0 = within tolerance, 1 = regression, 2 = usage/schema error.
 """
@@ -81,6 +82,29 @@ RULES = {
         # everything else — chosen configs (backend, tile geometry, knobs),
         # modeled bytes, candidate/measured counts, graph features — is a
         # function of the graph and the code alone: exact
+        ("*", EXACT),
+    ],
+    "stream": [
+        # live-burn-rate health snapshots of one run — never gated
+        ("cells.#.health.*", IGNORE),
+        # measured-over-measured ratios swing with machine noise on both
+        # numerator and denominator; the acceptance floors are asserted by
+        # the benchmark itself, not re-derived here
+        ("cells.#.regroup_vs_full_dbg_cost_ratio", IGNORE),
+        ("dist_remap.#.remap_vs_reshard_ratio", IGNORE),
+        ("dist_ingest.#.incremental_vs_rebuild", IGNORE),
+        # bounded inside the benchmark (two epsilon-converged solvers agree
+        # to ~1e-8); the exact float is machine noise
+        ("dist_ingest.#.pr_max_dev", IGNORE),
+        # wall clock and every throughput derived from it: wide bands
+        ("*second*", rel(4.0)),
+        ("*latency*", rel(4.0)),
+        # convergence iteration counts drift across XLA versions
+        ("cells.#.pr_push_iters_mean", rel(0.25, floor=1.0)),
+        # everything else — edge counts, moved vertices, compactions and
+        # per-shard folds, full-rebuild counts, MPKA simulations, the
+        # sssp_bitwise parity verdict — is a function of the deterministic
+        # stream and the code alone: exact
         ("*", EXACT),
     ],
     "apps": [

@@ -22,14 +22,30 @@ many vertices move per batch and what the FINAL layout's MPKA is as ``h``
 widens — the churn-vs-locality dial, folded into BENCH_stream.json as the
 ``hysteresis_sweep`` section.
 
+``--dist`` adds the ``dist_ingest`` section (PR 10): sustained sharded
+streaming ingest — the same churn schedule driven through a single-device
+``StreamService`` and a ``ShardedStreamService`` side by side, per (dataset,
+backend, device count, batch size): per-batch O(delta) routing cost vs ONE
+full ``shard_graph`` rebuild (the O(E) alternative), with parity columns
+(SSSP bitwise, PR max deviation) asserted inside the benchmark.
+
 Usage:
   PYTHONPATH=src python benchmarks/stream_churn.py [--scale small]
       [--datasets kr,uni] [--batch-sizes 256,1024,4096] [--batches 10]
-      [--sweep-h 0,0.125,0.25,0.5,1.0] [--out BENCH_stream.json] [--smoke]
+      [--sweep-h 0,0.125,0.25,0.5,1.0] [--dist] [--dist-devices 1,2,4,8]
+      [--out BENCH_stream.json] [--smoke]
 """
+import os
+
+if "REPRO_DIST_DEVICES" in os.environ:
+    # must land before jax is first imported (via repro.stream below)
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DIST_DEVICES"])
+
 import argparse
 import json
-import os
 import sys
 import time
 
@@ -269,6 +285,94 @@ def bench_dist_remap(key: str, scale: str, batch_size: int, num_batches: int,
     return cells
 
 
+def bench_dist_ingest(key: str, scale: str, batch_size: int,
+                      num_batches: int, seed: int = 3,
+                      device_counts=(1, 2, 4, 8), backends=("flat",)):
+    """Sustained sharded streaming ingest — the O(delta) batch path (PR 10).
+
+    The same deterministic churn schedule drives a single-device
+    ``StreamService`` and a ``ShardedStreamService`` side by side.  Timed:
+    the per-batch shard routing (delta buffers + tombstone flips + per-shard
+    compaction) vs ONE full ``shard_graph`` re-shard of the final graph —
+    what a deployment without the delta path would pay per batch.  Parity is
+    asserted, not just reported: SSSP answers must be bitwise equal and PR
+    within the two-solver epsilon band, else the benchmark exits nonzero.
+    """
+    import jax
+
+    from repro.apps import engine as apps_engine
+    from repro.dist import graph as dist_graph
+    from repro.dist import stream as dist_stream
+    from repro.stream.sharded import ShardedStreamService
+
+    g = datasets.load(key, scale, seed=seed)
+    counts = [d for d in device_counts if d <= len(jax.devices())]
+    cells = []
+    for backend in backends:
+        for d in counts:
+            # two identical passes (the bench_cell idiom): the first absorbs
+            # the jit compiles of the growing delta-buffer pads, the second
+            # is timed
+            for warmup in (True, False):
+                ref = StreamService(g, StreamConfig(regroup_every=1))
+                sh = ShardedStreamService(g, StreamConfig(regroup_every=1),
+                                          n_shards=d, backend=backend)
+                stream = ChurnStream(g, seed=seed)
+                route_s, edges_applied, folds = [], 0, 0
+                for _ in range(num_batches):
+                    a_s, a_d, d_s, d_d = stream.next_batch(ref.dg, batch_size)
+                    ref.ingest(add_src=a_s, add_dst=a_d,
+                               del_src=d_s, del_dst=d_d)
+                    st = sh.ingest(add_src=a_s, add_dst=a_d,
+                                   del_src=d_s, del_dst=d_d)
+                    info = sh.shard_history[-1]
+                    route_s.append(info["seconds"])
+                    folds += len(info.get("compacted", ())) \
+                        + int(info["full_rebuild"])
+                    edges_applied += st.inserted + st.deleted
+            pr_dev = float(np.max(np.abs(ref.pagerank() - sh.pagerank())))
+            sssp_ok = bool(np.array_equal(ref.sssp(0), sh.sssp(0)))
+            # the O(E) alternative: one full re-shard of the final graph
+            t0 = time.perf_counter()
+            sg = dist_graph.shard_graph(
+                apps_engine.to_arrays(ref.snapshot(), backend="arrays"),
+                d, backend=backend, stream=True)
+            dist_stream.sync_delta(sg)
+            rebuild_s = time.perf_counter() - t0
+            route_mean = float(np.mean(route_s))
+            cell = {
+                "dataset": key,
+                "scale": scale,
+                "backend": backend,
+                "n_shards": d,
+                "batch_size": batch_size,
+                "num_batches": num_batches,
+                "final_edges": ref.dg.num_edges,
+                "ingest_edges_per_second":
+                    edges_applied / max(1e-12, sum(route_s)),
+                "route_seconds_per_batch": route_mean,
+                "full_rebuild_seconds": rebuild_s,
+                "incremental_vs_rebuild": rebuild_s / max(1e-12, route_mean),
+                "full_rebuilds": sh.full_rebuilds,
+                "shard_folds": folds,
+                "pr_max_dev": pr_dev,
+                "sssp_bitwise": sssp_ok,
+            }
+            cells.append(cell)
+            print(f"[stream_churn] dist-ingest {key}/{backend} d={d} "
+                  f"b={batch_size}: "
+                  f"{cell['ingest_edges_per_second']/1e3:.1f} Ke/s routed, "
+                  f"{route_mean*1e3:.2f} ms/batch vs rebuild "
+                  f"{rebuild_s*1e3:.1f} ms "
+                  f"({cell['incremental_vs_rebuild']:.1f}x), "
+                  f"pr_dev {pr_dev:.2e} sssp_bitwise {sssp_ok}", flush=True)
+            if not sssp_ok or pr_dev > 2e-7:
+                print(f"[stream_churn] PARITY FAILURE in {key}/{backend} "
+                      f"d={d}", file=sys.stderr, flush=True)
+                sys.exit(1)
+    return cells
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", default="kr,uni")
@@ -278,6 +382,20 @@ def main() -> None:
     ap.add_argument("--sweep-h", default=None,
                     help="comma list of hysteresis values; adds the "
                          "hysteresis_sweep section (first batch size only)")
+    ap.add_argument("--dist", action="store_true",
+                    help="add the dist_ingest section: sharded streaming "
+                         "ingest vs full re-shard, with parity asserts")
+    ap.add_argument("--dist-devices", default="1,2,4,8",
+                    help="device counts for --dist (clipped to available; "
+                         "--smoke uses 1,2)")
+    ap.add_argument("--dist-datasets", default=None,
+                    help="datasets for --dist, each optionally 'key:scale' "
+                         "(default: kr,lj:bench — the acceptance pair, lj "
+                         "bumped to bench scale so its edge count matches "
+                         "kr/small; --smoke follows --datasets)")
+    ap.add_argument("--dist-backends", default=None,
+                    help="backends for --dist (default: flat; --smoke uses "
+                         "flat,ell for tile-path coverage)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: test scale, 2 batches, 1 size")
     ap.add_argument("--out", default=os.path.join(
@@ -320,6 +438,20 @@ def main() -> None:
     for key in args.datasets.split(","):
         out["dist_remap"].extend(bench_dist_remap(
             key, args.scale, max(batch_sizes), args.batches))
+    if args.dist:
+        devices = [int(x) for x in
+                   ("1,2" if args.smoke else args.dist_devices).split(",")]
+        dsets = args.dist_datasets or (args.datasets if args.smoke
+                                       else "kr,lj:bench")
+        backends = (args.dist_backends
+                    or ("flat,ell" if args.smoke else "flat")).split(",")
+        out["dist_ingest"] = []
+        for spec in dsets.split(","):
+            key, _, dscale = spec.partition(":")
+            for batch_size in batch_sizes:
+                out["dist_ingest"].extend(bench_dist_ingest(
+                    key, dscale or args.scale, batch_size, args.batches,
+                    device_counts=devices, backends=backends))
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"[stream_churn] wrote {args.out}", flush=True)

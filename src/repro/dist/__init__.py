@@ -13,5 +13,9 @@ Four layers, one discipline (logical axes everywhere):
 * ``graph``      — destination-sharded graph engine with the paper's DBG
   insight lifted to the device level: hot degree-groups replicated, cold tail
   owner-partitioned (halo exchange via all_to_all).
+* ``stream``     — O(delta) streaming maintenance of a sharded layout:
+  per-shard delta buffers + tombstone bitplanes, halo-aware insert routing,
+  per-shard threshold compaction, and geometry-cached sharded PR/SSSP
+  solvers over base + delta segment.
 """
-from . import constrain, graph, pipeline, sharding  # noqa: F401
+from . import constrain, graph, pipeline, sharding, stream  # noqa: F401

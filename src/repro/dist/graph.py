@@ -48,7 +48,7 @@ does the full re-shard it would have done every time before).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,9 +66,10 @@ from ..kernels.edge_map.edge_map import (edge_map_tile_bytes,
 from ..kernels.edge_map.ops import (_scatter_combine, _tile_of,
                                     ell_tiles_sharded)
 
-__all__ = ["ShardedGraphArrays", "shard_graph", "edge_map_pull_sharded",
-           "edge_map_push_sharded", "edge_map_bytes_sharded",
-           "pagerank_sharded", "apply_remap", "RemapOverflow"]
+__all__ = ["ShardedGraphArrays", "ShardDeltaSegment", "shard_graph",
+           "edge_map_pull_sharded", "edge_map_push_sharded",
+           "edge_map_bytes_sharded", "pagerank_sharded", "apply_remap",
+           "RemapOverflow", "HaloOverflow"]
 
 AXIS = "graph"
 
@@ -78,6 +79,45 @@ SHARDED_BACKENDS = ("flat", "ell")
 
 class RemapOverflow(RuntimeError):
     """apply_remap ran out of reserved hot/halo slots — re-shard instead."""
+
+
+class HaloOverflow(RemapOverflow):
+    """Streaming edge-delta routing ran out of reserved halo slots: an
+    inserted cold edge crosses a shard pair whose halo segment is full.
+    Subclasses :class:`RemapOverflow` so callers' existing full-re-shard
+    fallback covers both drift kinds with one except clause."""
+
+
+class ShardDeltaSegment(NamedTuple):
+    """Device view of the per-shard streaming delta buffers (a NamedTuple so
+    it rides jit/shard_map as a pytree).
+
+    The flat arrays are the edge-parallel delta representation (one entry
+    per routed edge, padded to capacity ``C``; dead/padding entries have
+    ``alive == False``).  ``pull_tiles``/``push_tiles`` are the fused
+    representation (``kernels.edge_map.ops.coo_tiles_sharded``) packed from
+    the same buffers for the ``"ell"`` backend.  Capacities grow
+    monotonically in powers of two, so the pytree SHAPES — and therefore any
+    cached sharded-query executable — stay stable across ingest batches.
+    """
+
+    # pull side (owner = destination shard): slots into [local|hot|halo]
+    slot: jnp.ndarray     # (D, C) int32
+    dstl: jnp.ndarray     # (D, C) int32 — dst - i*v_blk
+    w: jnp.ndarray        # (D, C) float32 (ones when unweighted)
+    alive: jnp.ndarray    # (D, C) bool
+    # push side (owner = source shard)
+    p_srcl: jnp.ndarray   # (D, Cp) int32
+    p_dst: jnp.ndarray    # (D, Cp) int32 — global (padded space)
+    p_w: jnp.ndarray      # (D, Cp) float32
+    p_alive: jnp.ndarray  # (D, Cp) bool
+    # fused COO delta tiles (backend "ell" only)
+    pull_tiles: Optional[Tuple] = None
+    push_tiles: Optional[Tuple] = None
+
+    @property
+    def capacity(self) -> Tuple[int, int]:
+        return int(self.slot.shape[1]), int(self.p_srcl.shape[1])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +157,9 @@ class ShardedGraphArrays:
     interpret: bool = True
     pull_tiles: Optional[Tuple] = None  # stacked EllTileGroups (slots → table)
     push_tiles: Optional[Tuple] = None  # stacked EllTileGroups (dst → local)
+    # streaming delta segment (dist.stream): per-shard edge-delta buffers +
+    # COO delta tiles riding the same shard_map next to the base arrays
+    delta: Optional[ShardDeltaSegment] = None
     stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # mutable host-side bookkeeping for apply_remap (shared across patched
     # copies; patching moves it forward, invalidating older snapshots)
@@ -165,6 +208,27 @@ def _with_headroom(n: int, frac: float) -> int:
     return n + int(np.ceil(n * frac)) + 8
 
 
+def _key_index(srcs: np.ndarray, dsts: np.ndarray,
+               v_pad: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(sorted keys, argsort order) over ``src * v_pad + dst`` — the O(log E)
+    deletion lookup the streaming path uses to find an edge's storage slot."""
+    keys = srcs.astype(np.int64) * np.int64(v_pad) + dsts.astype(np.int64)
+    order = np.argsort(keys, kind="stable")
+    return keys[order], order
+
+
+def _new_delta_buf(pull: bool, cap: int = 8) -> dict:
+    """Capacity-doubling host master of one shard's delta buffer."""
+    buf = {"dst": np.zeros(cap, np.int64), "w": np.zeros(cap, np.float32),
+           "alive": np.zeros(cap, bool), "n": 0}
+    if pull:
+        buf["src"] = np.zeros(cap, np.int64)
+        buf["slot"] = np.zeros(cap, np.int64)
+    else:
+        buf["srcl"] = np.zeros(cap, np.int64)
+    return buf
+
+
 def shard_graph(ga: GraphArrays, n_shards: int, *,
                 policy: str = "replicate_hot",
                 num_hot_groups: int = 6,
@@ -174,7 +238,8 @@ def shard_graph(ga: GraphArrays, n_shards: int, *,
                 interpret: bool = True,
                 hot_override: Optional[np.ndarray] = None,
                 remap_headroom: float = 0.25,
-                track_remap: Optional[bool] = None) -> ShardedGraphArrays:
+                track_remap: Optional[bool] = None,
+                stream: bool = False) -> ShardedGraphArrays:
     """Partition ``GraphArrays`` for an ``n_shards``-device 1D mesh.
 
     ``backend`` selects the per-shard edge-map implementation (resolved
@@ -188,8 +253,21 @@ def shard_graph(ga: GraphArrays, n_shards: int, *,
     (per-shard src index, slot masters, writable tile planes); default: only
     under ``replicate_hot`` — pass ``False`` for static/benchmark layouts
     that will never be remapped, dropping the host-memory overhead.
+
+    ``stream=True`` builds the STREAMING layout ``repro.dist.stream``
+    maintains in O(delta) per batch: per-shard delta buffers (pull side
+    owner-partitioned by destination, push side by source), key-sorted
+    deletion indexes over the base segments, and — on the ``"ell"`` backend —
+    all-ones tombstone bitplanes plus push-side lane positions, so individual
+    lanes can be killed or retargeted without repacking.  Implies
+    ``track_remap``.
     """
     _check_backend(backend)
+    if stream and track_remap is False:
+        raise ValueError("stream=True requires the remap bookkeeping "
+                         "(track_remap must not be False)")
+    if stream:
+        track_remap = True
     v = int(ga.in_deg.shape[0])
     d = int(n_shards)
     v_blk = -(-v // d)
@@ -294,19 +372,21 @@ def shard_graph(ga: GraphArrays, n_shards: int, *,
     if track_remap is None:
         track_remap = policy == "replicate_hot"
     pull_tiles = push_tiles = None
-    tile_pos = None
+    tile_pos = push_pos = None
     table_len = v_blk + hot_cap + d * halo_cap
     if backend == "ell":
         pulled = ell_tiles_sharded(
             [(dstl_rows[i].astype(np.int64), slot_rows[i],
               w_rows[i] if weighted else None) for i in range(d)],
             id_upper=table_len, row_tile=row_tile, width_tile=width_tile,
-            with_positions=track_remap)
+            with_positions=track_remap, with_alive=stream)
         pull_tiles, tile_pos = pulled if track_remap else (pulled, None)
-        push_tiles = ell_tiles_sharded(
+        pushed = ell_tiles_sharded(
             [(pdst_rows[i].astype(np.int64), srcl_rows[i].astype(np.int64),
               pw_rows[i] if weighted else None) for i in range(d)],
-            id_upper=v_blk, row_tile=row_tile, width_tile=width_tile)
+            id_upper=v_blk, row_tile=row_tile, width_tile=width_tile,
+            with_positions=stream, with_alive=stream)
+        push_tiles, push_pos = pushed if stream else (pushed, None)
 
     stats = {
         "policy": policy,
@@ -347,6 +427,51 @@ def shard_graph(ga: GraphArrays, n_shards: int, *,
                                for t in pull_tiles]),
             "halo_slots": int(halo_slots),
         }
+        if stream:
+            vp = d * v_blk
+            in_dst_rows = [in_dst[bounds[i]:bounds[i + 1]].astype(np.int64)
+                           for i in range(d)]
+            out_src_rows = [out_src[pbounds[i]:pbounds[i + 1]]
+                            .astype(np.int64) for i in range(d)]
+            host["stream"] = {
+                "weighted": weighted,
+                # pull base segments (dst-sorted) + key-sorted (src,dst)
+                # deletion index per shard
+                "in_dst": in_dst_rows,
+                "in_wv": [np.asarray(w, np.float32) for w in w_rows],
+                "in_alive": [np.ones(r.shape[0], bool) for r in in_dst_rows],
+                "in_key": [_key_index(shard_srcs[i], in_dst_rows[i], vp)
+                           for i in range(d)],
+                "in_dead": np.zeros(d, np.int64),
+                # push base segments (src-partitioned)
+                "out_src": out_src_rows,
+                "out_dst": [np.asarray(r, np.int64) for r in pdst_rows],
+                "out_wv": [np.asarray(w, np.float32) for w in pw_rows],
+                "out_alive": [np.ones(r.shape[0], bool)
+                              for r in out_src_rows],
+                "out_key": [_key_index(out_src_rows[i],
+                                       np.asarray(pdst_rows[i], np.int64),
+                                       vp) for i in range(d)],
+                "out_dead": np.zeros(d, np.int64),
+                # per-shard delta buffers (host masters; device copies are
+                # rebuilt by dist.stream.sync_delta when dirty)
+                "d": [_new_delta_buf(True) for _ in range(d)],
+                "p": [_new_delta_buf(False) for _ in range(d)],
+                "delta_dirty": True,
+                "caps": {"c": 8, "cp": 8, "pr": (0, 0), "pp": (0, 0)},
+                "push_tile_pos": push_pos,
+                # writable tombstone bitplane masters (backend "ell")
+                "pull_alive": (None if pull_tiles is None else
+                               [np.ones(tuple(t.idx.shape), np.int8)
+                                for t in pull_tiles]),
+                "push_alive": (None if push_tiles is None else
+                               [np.ones(tuple(t.idx.shape), np.int8)
+                                for t in push_tiles]),
+                "push_tile_idx": (None if push_tiles is None else
+                                  [np.array(t.idx) for t in push_tiles]),
+                "push_tile_w": (None if push_tiles is None or not weighted
+                                else [np.array(t.w) for t in push_tiles]),
+            }
     return ShardedGraphArrays(
         n_shards=d, num_vertices=v, v_blk=v_blk, halo_max=halo_cap,
         policy=policy,
@@ -386,25 +511,30 @@ def _resolve_backend(sg: ShardedGraphArrays, backend: Optional[str]) -> str:
 
 
 def _flatten_tiles(tiles) -> Tuple[list, list]:
-    """EllTileGroups -> flat arg list + per-group has_w meta (shard_map needs
-    positional array args to split on the leading shard dim)."""
+    """EllTileGroups -> flat arg list + per-group (has_w, has_alive) meta
+    (shard_map needs positional array args to split on the leading shard
+    dim)."""
     args, meta = [], []
     for t in tiles:
         args += [t.rows, t.idx, t.deg]
         if t.w is not None:
             args.append(t.w)
-        meta.append(t.w is not None)
+        if t.alive is not None:
+            args.append(t.alive)
+        meta.append((t.w is not None, t.alive is not None))
     return args, meta
 
 
 def _unflatten_tiles(flat, meta):
     out, i = [], 0
-    for has_w in meta:
+    for has_w, has_alive in meta:
         rows, idx, deg = flat[i:i + 3]
         i += 3
         w = flat[i] if has_w else None
         i += int(has_w)
-        out.append((rows, idx, deg, w))
+        alive = flat[i] if has_alive else None
+        i += int(has_alive)
+        out.append((rows, idx, deg, w, alive))
     return out
 
 
@@ -446,8 +576,12 @@ def edge_map_pull_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
             halo = jax.lax.all_to_all(halo, AXIS, split_axis=0, concat_axis=0)
         return halo
 
+    delta = sg.delta
     if backend == "flat":
-        def ranked(blocks, hot, send_idx, slot, dstl, w, mask):
+        dargs = () if delta is None else (delta.slot, delta.dstl, delta.w,
+                                          delta.alive)
+
+        def ranked(blocks, hot, send_idx, slot, dstl, w, mask, *dflat):
             local = blocks[0]
             halo = exchange(local, send_idx)
             table = jnp.concatenate([local, hot, halo.reshape(-1)])
@@ -464,34 +598,50 @@ def edge_map_pull_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
                 out = jax.ops.segment_max(vals, dstl[0], **seg)
             else:
                 raise ValueError(reduce)
+            if dflat:
+                # streaming delta segment: same gather table, scatter-combine
+                # (delta destinations duplicate base rows)
+                dslot, ddstl, dw, dalive = dflat
+                dv = table[dslot[0]]
+                if use_weights:
+                    dv = dv + dw[0]
+                dv = jnp.where(dalive[0], dv, jnp.asarray(neutral, dv.dtype))
+                out = _scatter_combine(out, ddstl[0], dv, red)
             return out[None]
 
         a = P(AXIS)
         fn = shard_map(ranked, mesh=mesh,
-                       in_specs=(a, P(), a, a, a, a, a), out_specs=a,
-                       check_rep=False)
+                       in_specs=(a, P(), a, a, a, a, a) + (a,) * len(dargs),
+                       out_specs=a, check_rep=False)
         with obs_trace.span("dist.edge_map_pull", cat="dist",
                             backend=backend, shards=d, reduce=reduce):
             out = fn(prop_blocks, hot_tab, sg.send_idx, sg.in_slot,
-                     sg.in_dst_local, sg.in_w, sg.in_mask)
+                     sg.in_dst_local, sg.in_w, sg.in_mask, *dargs)
         return out.reshape(-1)[: sg.num_vertices]
 
     # fused per-shard DBG-ELL path: one kernel pass per width class over the
     # same gather table, then an O(v_blk) combine — no O(E) intermediates
     identity = reduce_identity(red)
     tile_args, meta = _flatten_tiles(sg.pull_tiles)
+    dtiles = () if delta is None or delta.pull_tiles is None \
+        else delta.pull_tiles
+    dtile_args, dmeta = _flatten_tiles(dtiles)
+    n_base = len(tile_args)
 
     def ranked_ell(blocks, hot, send_idx, *flat_tiles):
         local = blocks[0]
         halo = exchange(local, send_idx)
         table = jnp.concatenate([local, hot, halo.reshape(-1)])
         out = jnp.full((v_blk,), identity, table.dtype)
-        for rows, idx, deg, w in _unflatten_tiles(flat_tiles, meta):
+        groups = (_unflatten_tiles(flat_tiles[:n_base], meta)
+                  + _unflatten_tiles(flat_tiles[n_base:], dmeta))
+        for rows, idx, deg, w, alive in groups:
             r_pad, w_pad = idx.shape[1], idx.shape[2]
             y = ell_edge_map_pallas(
                 table, idx[0], deg[0], reduce=red,
                 w=w[0] if (use_weights and w is not None) else None,
                 unit_weights=use_weights,
+                alive=alive[0] if alive is not None else None,
                 neutral=neutral, identity=identity,
                 row_tile=_tile_of(r_pad, sg.row_tile),
                 width_tile=_tile_of(w_pad, sg.width_tile),
@@ -501,11 +651,11 @@ def edge_map_pull_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
 
     a = P(AXIS)
     fn = shard_map(ranked_ell, mesh=mesh,
-                   in_specs=(a, P(), a) + (a,) * len(tile_args), out_specs=a,
-                   check_rep=False)
+                   in_specs=(a, P(), a) + (a,) * (n_base + len(dtile_args)),
+                   out_specs=a, check_rep=False)
     with obs_trace.span("dist.edge_map_pull", cat="dist",
                         backend=backend, shards=d, reduce=reduce):
-        out = fn(prop_blocks, hot_tab, sg.send_idx, *tile_args)
+        out = fn(prop_blocks, hot_tab, sg.send_idx, *tile_args, *dtile_args)
     return out.reshape(-1)[: sg.num_vertices]
 
 
@@ -545,8 +695,13 @@ def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
         i = jax.lax.axis_index(AXIS)
         return jax.lax.dynamic_slice_in_dim(partial, i * v_blk, v_blk)
 
+    delta = sg.delta
+    red = "max" if reduce == "or" else reduce
     if backend == "flat":
-        def ranked(blocks, srcl, dst, w, mask):
+        dargs = () if delta is None else (delta.p_srcl, delta.p_dst,
+                                          delta.p_w, delta.p_alive)
+
+        def ranked(blocks, srcl, dst, w, mask, *dflat):
             local = blocks[0]
             vals = local[srcl[0]]
             if use_weights:
@@ -561,29 +716,43 @@ def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
                 partial = partial.at[dst[0]].max(vals)
             else:
                 raise ValueError(reduce)
+            if dflat:
+                ps, pd, pw, pa = dflat
+                dv = local[ps[0]]
+                if use_weights:
+                    dv = dv + pw[0]
+                dv = jnp.where(pa[0], dv, jnp.asarray(fill, dv.dtype))
+                partial = _scatter_combine(partial, pd[0], dv, red)
             return collect(partial)[None]
 
         a = P(AXIS)
-        fn = shard_map(ranked, mesh=mesh, in_specs=(a, a, a, a, a),
+        fn = shard_map(ranked, mesh=mesh,
+                       in_specs=(a, a, a, a, a) + (a,) * len(dargs),
                        out_specs=a, check_rep=False)
         with obs_trace.span("dist.edge_map_push", cat="dist",
                             backend=backend, shards=d, reduce=reduce):
             out = fn(prop_blocks, sg.out_src_local, sg.out_dst, sg.out_w,
-                     sg.out_mask)
+                     sg.out_mask, *dargs)
     else:
-        red = "max" if reduce == "or" else reduce
         identity = reduce_identity(red)  # masked lanes can never win a max
         tile_args, meta = _flatten_tiles(sg.push_tiles)
+        dtiles = () if delta is None or delta.push_tiles is None \
+            else delta.push_tiles
+        dtile_args, dmeta = _flatten_tiles(dtiles)
+        n_base = len(tile_args)
 
         def ranked_ell(blocks, *flat_tiles):
             local = blocks[0]
             partial = jnp.full((v_pad,), fill, local.dtype)
-            for rows, idx, deg, w in _unflatten_tiles(flat_tiles, meta):
+            groups = (_unflatten_tiles(flat_tiles[:n_base], meta)
+                      + _unflatten_tiles(flat_tiles[n_base:], dmeta))
+            for rows, idx, deg, w, alive in groups:
                 r_pad, w_pad = idx.shape[1], idx.shape[2]
                 y = ell_edge_map_pallas(
                     local, idx[0], deg[0], reduce=red,
                     w=w[0] if (use_weights and w is not None) else None,
                     unit_weights=use_weights,
+                    alive=alive[0] if alive is not None else None,
                     neutral=fill, identity=identity,
                     row_tile=_tile_of(r_pad, sg.row_tile),
                     width_tile=_tile_of(w_pad, sg.width_tile),
@@ -593,11 +762,11 @@ def edge_map_push_sharded(sg: ShardedGraphArrays, prop: jnp.ndarray, mesh, *,
 
         a = P(AXIS)
         fn = shard_map(ranked_ell, mesh=mesh,
-                       in_specs=(a,) + (a,) * len(tile_args), out_specs=a,
-                       check_rep=False)
+                       in_specs=(a,) + (a,) * (n_base + len(dtile_args)),
+                       out_specs=a, check_rep=False)
         with obs_trace.span("dist.edge_map_push", cat="dist",
                             backend=backend, shards=d, reduce=reduce):
-            out = fn(prop_blocks, *tile_args)
+            out = fn(prop_blocks, *tile_args, *dtile_args)
 
     out = out.reshape(-1)[: sg.num_vertices]
     if init is not None:
@@ -630,6 +799,7 @@ def edge_map_bytes_sharded(sg: ShardedGraphArrays, *, mode: str = "pull",
     e = int(sg.in_slot.shape[1] if mode == "pull" else sg.out_dst.shape[1])
     table = sg.table_len if mode == "pull" else sg.v_blk
     out_len = sg.v_blk if mode == "pull" else sg.v_pad
+    delta = sg.delta
     if backend == "flat":
         b = e * 4 + e * 4 + e * 4      # slot ids, table gather, vals write
         if use_weights:
@@ -637,15 +807,26 @@ def edge_map_bytes_sharded(sg: ShardedGraphArrays, *, mode: str = "pull",
         b += e * 1 + 2 * e * 4         # pad mask + vals rmw
         b += e * 4 + e * 4 + out_len * 4  # reduce/scatter pass + out write
         b += table * 4                 # gather-table materialize
+        if delta is not None:
+            c = int(delta.slot.shape[1] if mode == "pull"
+                    else delta.p_dst.shape[1])
+            # slot/src read + gather + alive byte + dst read + scatter rmw
+            b += c * 4 + c * 4 + c * 1 + c * 4 + 2 * c * 4
+            if use_weights:
+                b += c * 4
         return b
     tiles = sg.pull_tiles if mode == "pull" else sg.push_tiles
+    dtiles = ()
+    if delta is not None:
+        dtiles = (delta.pull_tiles if mode == "pull"
+                  else delta.push_tiles) or ()
     total = out_len * 4                # combine write
-    for t in tiles:
+    for t in tuple(tiles) + tuple(dtiles):
         r_pad, w_pad = int(t.idx.shape[1]), int(t.idx.shape[2])
         total += edge_map_tile_bytes(
             r_pad, w_pad, table,
             weighted=use_weights and t.w is not None,
-            frontier=False, alive=False, init=False,
+            frontier=False, alive=t.alive is not None, init=False,
             idx_itemsize=t.idx.dtype.itemsize)
     return total
 
@@ -653,6 +834,77 @@ def edge_map_bytes_sharded(sg: ShardedGraphArrays, *, mode: str = "pull",
 # ---------------------------------------------------------------------------
 # shard-aware update routing (stream.RemapDelta -> patched layout)
 # ---------------------------------------------------------------------------
+
+def _halo_slot(sg: ShardedGraphArrays, i: int, src: int,
+               exc=RemapOverflow) -> int:
+    """Table slot of remote cold ``src`` on shard ``i`` (stable allocation).
+
+    Build-time halo members resolve through the sorted ``need0`` lists; later
+    arrivals (remap movers, streamed edge inserts) append into the reserved
+    headroom and are memoized in ``halo_entry`` so every (shard, src) pair
+    gets exactly one slot.  Raises ``exc`` when the halo segment for the
+    owning shard pair is full (:class:`RemapOverflow` from apply_remap,
+    :class:`HaloOverflow` from the streaming delta router).
+    """
+    host = sg.host
+    v_blk, hot_cap, halo_cap = sg.v_blk, sg.hot_cap, sg.halo_max
+    o = src // v_blk
+    base = v_blk + hot_cap + o * halo_cap
+    lst = host["need0"][i][o]
+    p = np.searchsorted(lst, src)
+    if p < len(lst) and lst[p] == src:
+        return base + int(p)
+    key = (i, src)
+    p = host["halo_entry"].get(key)
+    if p is None:
+        p = int(host["need_len"][i, o])
+        if p >= halo_cap:
+            raise exc(
+                f"halo capacity {halo_cap} exhausted for shard pair "
+                f"({o}->{i})")
+        host["need_len"][i, o] = p + 1
+        host["send_idx"][o, i, p] = src - o * v_blk
+        host["halo_entry"][key] = p
+        host["halo_slots"] += 1
+    return base + p
+
+
+def _retarget_delta_slots(sg: ShardedGraphArrays, movers: np.ndarray) -> None:
+    """Recompute the pull-delta slots of ``movers``' streamed edges (host
+    masters only — the device delta segment is rebuilt at the next
+    ``dist.stream.sync_delta``), so a regroup remap and the batch's edge
+    deltas land in one patch."""
+    host = sg.host
+    st = host.get("stream")
+    if st is None:
+        return
+    hot_pos = host["hot_pos"]
+    v_blk = sg.v_blk
+    for i in range(sg.n_shards):
+        db = st["d"][i]
+        n = db["n"]
+        if n == 0:
+            continue
+        srcs_d = db["src"][:n]
+        m = np.isin(srcs_d, movers) & db["alive"][:n]
+        if not m.any():
+            continue
+        src_t = srcs_d[m]
+        new_slots = np.empty(src_t.shape[0], np.int64)
+        hp = hot_pos[src_t]
+        m_hot = hp >= 0
+        new_slots[m_hot] = v_blk + hp[m_hot]
+        m_local = ~m_hot & (src_t // v_blk == i)
+        new_slots[m_local] = src_t[m_local] - i * v_blk
+        m_halo = ~m_hot & ~m_local
+        if m_halo.any():
+            u, inv = np.unique(src_t[m_halo], return_inverse=True)
+            u_slots = np.array([_halo_slot(sg, i, int(s)) for s in u],
+                               np.int64)
+            new_slots[m_halo] = u_slots[inv]
+        db["slot"][: n][m] = new_slots
+        st["delta_dirty"] = True
+
 
 def apply_remap(sg: ShardedGraphArrays, delta) -> ShardedGraphArrays:
     """Re-home ONLY the vertices whose degree group changed.
@@ -715,32 +967,7 @@ def apply_remap(sg: ShardedGraphArrays, delta) -> ShardedGraphArrays:
         hot_pos[vid] = p
         host["hot_ids"][p] = vid
 
-    need_len = host["need_len"]
-    halo_entry = host["halo_entry"]
     send_master = host["send_idx"]
-
-    def halo_slot(i: int, src: int) -> int:
-        """Table slot of remote cold ``src`` on shard ``i`` (stable)."""
-        o = src // v_blk
-        base = sg.v_blk + hot_cap + o * halo_cap
-        lst = host["need0"][i][o]
-        p = np.searchsorted(lst, src)
-        if p < len(lst) and lst[p] == src:
-            return base + int(p)
-        key = (i, src)
-        p = halo_entry.get(key)
-        if p is None:
-            p = int(need_len[i, o])
-            if p >= halo_cap:
-                raise RemapOverflow(
-                    f"halo capacity {halo_cap} exhausted for shard pair "
-                    f"({o}->{i})")
-            need_len[i, o] = p + 1
-            send_master[o, i, p] = src - o * v_blk
-            halo_entry[key] = p
-            host["halo_slots"] += 1
-        return base + p
-
     dirty_shards: List[int] = []
     dirty_rows: List[np.ndarray] = []
     dirty_tiles: Dict[int, set] = {}
@@ -769,7 +996,8 @@ def apply_remap(sg: ShardedGraphArrays, delta) -> ShardedGraphArrays:
         m_halo = ~m_hot & ~m_local
         if m_halo.any():
             u, inv = np.unique(src_t[m_halo], return_inverse=True)
-            u_slots = np.array([halo_slot(i, int(s)) for s in u], np.int64)
+            u_slots = np.array([_halo_slot(sg, i, int(s)) for s in u],
+                               np.int64)
             new_slots[m_halo] = u_slots[inv]
         slots[touched] = new_slots
         if host["tile_pos"] is not None:
@@ -788,6 +1016,10 @@ def apply_remap(sg: ShardedGraphArrays, delta) -> ShardedGraphArrays:
     for vid in newly_cold.tolist():
         free.append(int(hot_pos[vid]))
         hot_pos[vid] = -1
+
+    # streamed (not-yet-compacted) edges of the movers re-home too, so the
+    # regroup remap and the edge deltas land in ONE patch
+    _retarget_delta_slots(sg, movers)
 
     in_slot = sg.in_slot
     if dirty_shards:

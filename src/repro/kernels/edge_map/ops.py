@@ -28,6 +28,7 @@ __all__ = [
     "ell_tiles",
     "ell_tiles_sharded",
     "coo_tiles",
+    "coo_tiles_sharded",
     "refresh_alive",
     "fused_edge_map",
     "fused_edge_map_bytes",
@@ -204,6 +205,7 @@ def ell_tiles_sharded(
     row_tile: int = 64,
     width_tile: int = 128,
     with_positions: bool = False,
+    with_alive: bool = False,
 ):
     """Pack D per-shard edge lists into ELL groups that STACK across shards.
 
@@ -222,7 +224,10 @@ def ell_tiles_sharded(
     ``with_positions=True`` additionally returns, per shard, an ``(E_i, 3)``
     int32 array mapping each input edge (input order) to its ``(class, row,
     col)`` tile slot — the patch index ``repro.dist.graph.apply_remap`` uses
-    to retarget individual lanes without repacking.
+    to retarget individual lanes without repacking.  ``with_alive=True``
+    attaches an all-ones int8 tombstone plane to every group so a streaming
+    layout can later kill individual lanes in place (the sharded counterpart
+    of the stream base's ``refresh_alive`` bitplanes).
     """
     from ...core.reorder import _assign_groups, dbg_spec
 
@@ -287,7 +292,9 @@ def ell_tiles_sharded(
         groups.append(EllTileGroup(
             rows=jnp.asarray(rws), idx=jnp.asarray(idx),
             deg=jnp.asarray(deg),
-            w=None if wgt is None else jnp.asarray(wgt)))
+            w=None if wgt is None else jnp.asarray(wgt),
+            alive=(jnp.ones((d, r_pad, w_pad), jnp.int8)
+                   if with_alive else None)))
     tiles = tuple(groups)
     if with_positions:
         return tiles, positions
@@ -334,6 +341,65 @@ def coo_tiles(
         w=None if wp is None else jnp.asarray(wp),
         alive=None if ap is None else jnp.asarray(ap),
     ),)
+
+
+def coo_tiles_sharded(
+    shard_edges: Sequence[Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]],
+    *,
+    id_upper: int,
+    row_cap: int = 0,
+    width_cap: int = 0,
+    row_tile: int = 64,
+    width_tile: int = 128,
+) -> Tuple[EllTileGroup, ...]:
+    """The delta-segment companion of :func:`ell_tiles_sharded`: D per-shard
+    COO delta lists packed into ONE dst-grouped tile group with a leading
+    shard dim, so the stream delta buffer rides ``shard_map`` next to the
+    stacked base tiles.
+
+    ``shard_edges[i] = (rows, cols, w|None)`` is shard *i*'s ALIVE delta
+    edges (rows = destination ids in that shard's row space, cols = gather
+    indices < ``id_upper``).  Unlike the base packer the geometry here is
+    CAPACITY-driven, not content-driven: the row/width dims pad to at least
+    ``row_cap`` / ``width_cap`` (callers pass the running maxima back in), so
+    the device shapes stay stable while the buffer fills and only grow
+    monotonically — recompiles of a cached sharded query stay logarithmic in
+    the number of ingest batches instead of per-batch.  Delta destinations
+    duplicate base rows, so results fold in through the reduction's
+    scatter-op (``fused_edge_map``'s ``extra_tiles`` contract).  Delta rows
+    are shallow (multiplicity ~1), so a single width class — the first
+    geometric bin the base packer would assign them to — covers the segment.
+    """
+    d = len(shard_edges)
+    per = []
+    max_rows = max_width = 0
+    for rows, cols, w in shard_edges:
+        order = np.argsort(rows, kind="stable")
+        urows, degs = np.unique(rows[order], return_counts=True)
+        per.append((urows, degs.astype(np.int64), cols[order],
+                    None if w is None else w[order]))
+        max_rows = max(max_rows, int(urows.size))
+        max_width = max(max_width, int(degs.max()) if degs.size else 0)
+    r_pad = _pad_dim(max(1, max_rows, row_cap), row_tile)
+    w_pad = _pad_dim(max(1, max_width, width_cap), width_tile)
+    weighted = any(p[3] is not None for p in per)
+    id_dtype = _id_dtype(id_upper)
+    idx = np.zeros((d, r_pad, w_pad), id_dtype)
+    deg = np.zeros((d, r_pad), np.int32)
+    rws = np.zeros((d, r_pad), np.int32)
+    wgt = np.zeros((d, r_pad, w_pad), np.float32) if weighted else None
+    for i, (urows, degs, cs, ws) in enumerate(per):
+        if urows.size == 0:
+            continue
+        row_rep, col = _slot_coords(degs)
+        idx[i][row_rep, col] = cs.astype(id_dtype)
+        if wgt is not None and ws is not None:
+            wgt[i][row_rep, col] = ws
+        deg[i, : urows.size] = degs
+        rws[i, : urows.size] = urows.astype(np.int32)
+    return (EllTileGroup(
+        rows=jnp.asarray(rws), idx=jnp.asarray(idx), deg=jnp.asarray(deg),
+        w=None if wgt is None else jnp.asarray(wgt)),)
 
 
 def _scatter_combine(out: jnp.ndarray, rows: jnp.ndarray, vals: jnp.ndarray,

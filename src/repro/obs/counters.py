@@ -120,6 +120,13 @@ class EdgeMapCounters:
       ``edge_map.edges``                                 edges traversed
       ``edge_map.lanes``                                 ``K`` summed per pass
       ``edge_map.model_bytes``                           modeled HBM bytes
+      ``edge_map.shard_edges.{i}`` / ``edge_map.shard_bytes.{i}``
+          per-shard attribution on sharded passes: shard ``i``'s alive edges
+          (from the direction's degree plane — base + delta − tombstones)
+          and its slice of the byte model, with the reconciliation contract
+          ``sum_i shard_bytes.i == model_bytes`` contribution of the pass
+          (each shard's slice IS ``dist.graph.edge_map_bytes_sharded``, the
+          stacked layout being shard-uniform)
       ``edge_map.frontier_density``                      histogram, per pass
       ``edge_map.iters.{app}`` / ``edge_map.queries.{app}``  via record_iters
 
@@ -166,7 +173,7 @@ class EdgeMapCounters:
             reg.counter(f"edge_map.{which}.{name}.{direction}").inc()
             return
 
-        edges = self._num_edges(ga, name)
+        edges = self._num_edges(ga, name, direction)
         plane_k = 1
         shape = getattr(prop, "shape", None)
         if shape is not None and len(shape) > 1:
@@ -179,6 +186,14 @@ class EdgeMapCounters:
                                         kw, src_frontier)
         if model_bytes:
             reg.counter("edge_map.model_bytes").inc(model_bytes)
+
+        if name.startswith("sharded"):
+            per_edges = self._shard_edges(ga, direction)
+            if per_edges is not None:
+                per_bytes = model_bytes // max(1, len(per_edges))
+                for i, e_i in enumerate(per_edges):
+                    reg.counter(f"edge_map.shard_edges.{i}").inc(int(e_i))
+                    reg.counter(f"edge_map.shard_bytes.{i}").inc(per_bytes)
 
         density = self._frontier_density(ga, src_frontier)
         if density is not None:
@@ -204,13 +219,31 @@ class EdgeMapCounters:
                 if k.startswith(prefix)}
 
     # -- models --------------------------------------------------------------
-    def _num_edges(self, ga: Any, name: str) -> int:
+    def _num_edges(self, ga: Any, name: str, direction: str = "pull") -> int:
         if name.startswith("sharded"):
-            mask = getattr(ga, "in_mask", None)
-            if mask is None or _is_tracer(mask):
-                return 0
-            return int(np.asarray(mask).sum())
+            per = self._shard_edges(ga, direction)
+            return 0 if per is None else int(per.sum())
         return _static_num_edges(ga)
+
+    def _shard_edges(self, ga: Any, direction: str) -> Optional[np.ndarray]:
+        """Alive edges owned by each shard: the (V,) degree vector of the
+        pass direction, split by owner block (``v_blk``).  Destination
+        sharding puts every edge at exactly one owner, and the degrees are
+        maintained under streaming ingest, so this counts base + delta −
+        tombstones on both the flat and the ell layout without touching any
+        O(E) plane."""
+        deg = getattr(ga, "out_deg" if direction == "push" else "in_deg",
+                      None)
+        d = int(getattr(ga, "n_shards", 0) or 0)
+        v_blk = int(getattr(ga, "v_blk", 0) or 0)
+        if deg is None or _is_tracer(deg) or d <= 0 or v_blk <= 0:
+            return None
+        deg = np.asarray(deg)
+        if deg.ndim != 1:
+            return None
+        pad = np.zeros(d * v_blk, np.int64)
+        pad[:deg.shape[0]] = deg  # v_pad = d * v_blk >= V
+        return pad.reshape(d, v_blk).sum(axis=1)
 
     def _model_bytes(self, ga: Any, name: str, direction: str, edges: int,
                      plane_k: int, kw: Dict[str, Any],

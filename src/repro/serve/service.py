@@ -48,6 +48,7 @@ from ..graph import csr
 from ..obs import flight as obs_flight
 from ..obs import trace as obs_trace
 from ..obs.slo import Objective, SLOTracker
+from ..stream.incremental import StreamBackend
 from ..stream.service import StreamConfig, StreamService
 from .batch import PendingQuery, Query, QueryQueue, QueueFull
 from .batched import batched_pagerank, batched_sssp
@@ -65,6 +66,12 @@ class ServeConfig:
     deadline: float = 0.0    # seconds a partial batch may wait to fill
     # snapshot cadence
     publish_every: int = 1   # ingest batches between snapshot publishes
+    # O(delta) publishes: each version reuses the stream plane's cached
+    # base arrays (only delta rows differ) via ``stream.StreamBackend``
+    # instead of materializing a CSR + rebuilding ``backend`` arrays from
+    # scratch; the full graph is only built if a reader forces
+    # ``Snapshot.graph``.  Overrides ``backend`` for query batches.
+    incremental_publish: bool = False
     # edge-map backend for query batches (engine.BACKENDS name; "auto"
     # resolves the active repro.tune plan per snapshot + query kind)
     backend: str = "flat"
@@ -155,11 +162,23 @@ class GraphServeService:
                                      del_dst=del_dst)
             self._ingest_batches += 1
             if self._ingest_batches % max(1, self.config.publish_every) == 0:
-                with obs_trace.span("serve.snapshot_materialize",
-                                    cat="serve"):
-                    g = self.stream.snapshot()
-                self.store.publish(g)
+                self._publish()
         return res
+
+    def _publish(self) -> None:
+        if not self.config.incremental_publish:
+            with obs_trace.span("serve.snapshot_materialize", cat="serve"):
+                g = self.stream.snapshot()
+            self.store.publish(g)
+            return
+        # O(delta): the backend is built straight from the stream plane's
+        # cached base uploads + padded delta buffer; the version's graph is
+        # a thunk over those (immutable) arrays, materialized only if a
+        # reader forces Snapshot.graph
+        backend = StreamBackend.from_delta(self.stream.dg)
+        self.store.publish(backend.materialize,
+                           num_vertices=backend.num_vertices,
+                           cache={"backend:stream": backend})
 
     @property
     def snapshot_version(self) -> int:
@@ -217,6 +236,10 @@ class GraphServeService:
     # -- batch execution ----------------------------------------------------
     def _backend(self, snap: Snapshot, kind: Optional[str] = None):
         cfg = self.config
+        if "backend:stream" in snap._cache:
+            # incremental publish pre-seeded the O(delta) stream backend —
+            # it IS this version's arrays; nothing to build
+            return snap._cache["backend:stream"]
         from ..tune.space import validate_knobs
         if cfg.backend == "auto":
             # the plan owns the tile geometry; only the execution mode and
@@ -241,6 +264,10 @@ class GraphServeService:
         if self.config.density_threshold is not None:
             return self.config.density_threshold
         if self.config.backend != "auto":
+            return None
+        if "backend:stream" in snap._cache:
+            # the switch is a traffic choice (both directions are bitwise
+            # identical); don't force an O(E) materialization to tune it
             return None
         from ..tune import plan as tune_plan
         return snap.cached("tune:sssp_threshold", lambda g: tune_plan
@@ -278,7 +305,7 @@ class GraphServeService:
                                         batch_epoch=epoch,
                                         snapshot_version=snap.version)
                 ga = self._backend(snap, kind)
-                v = snap.graph.num_vertices
+                v = snap.num_vertices
                 with obs_trace.span(f"engine.solve.{kind}", cat="engine",
                                     width=len(batch), batch_epoch=epoch,
                                     version=snap.version,

@@ -6,9 +6,12 @@ edge-map iterations must NOT see those mutations mid-flight, or lane results
 can mix two graph states (a half-applied delta batch).  The fix is the
 classic double-buffered snapshot:
 
-  * ``publish(graph)`` installs an immutable materialized CSR as version N+1
-    while version N keeps serving — readers already pinned to N are
-    untouched;
+  * ``publish(graph)`` installs an immutable CSR as version N+1 while
+    version N keeps serving — readers already pinned to N are untouched.
+    ``graph`` may be a thunk (plus a pre-seeded backend cache): the
+    O(delta) incremental-publish path, where the version's arrays come
+    from the stream plane's cached base + delta and the full CSR is only
+    built if a reader explicitly forces ``Snapshot.graph``;
   * ``acquire()`` pins the CURRENT version (refcount++) and returns it; the
     batch runs every iteration against that one immutable graph;
   * ``release(snap)`` unpins; a superseded version is reclaimed (its cached
@@ -40,13 +43,38 @@ __all__ = ["Snapshot", "SnapshotStore"]
 
 @dataclasses.dataclass
 class Snapshot:
-    """One immutable published graph version plus its reader refcount."""
+    """One immutable published graph version plus its reader refcount.
+
+    ``_graph`` is either a materialized ``csr.Graph`` (eager publish) or a
+    zero-argument thunk that builds the version-N graph on first access
+    (lazy publish — the O(delta) path: the thunk closes over immutable
+    version-N arrays, so a late materialization is still isolation-exact).
+    """
 
     version: int
-    graph: csr.Graph
+    _graph: Any  # csr.Graph | Callable[[], csr.Graph]
     refs: int = 0
     retired: bool = False  # superseded; reclaim when refs hits 0
     _cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    _num_vertices: Optional[int] = None  # hint; avoids forcing the thunk
+
+    @property
+    def graph(self) -> csr.Graph:
+        if callable(self._graph):
+            with obs_trace.span("serve.snapshot_materialize", cat="serve",
+                                version=self.version, lazy=True):
+                self._graph = self._graph()
+        return self._graph
+
+    @property
+    def materialized(self) -> bool:
+        return not callable(self._graph)
+
+    @property
+    def num_vertices(self) -> int:
+        if self._num_vertices is not None:
+            return self._num_vertices
+        return self.graph.num_vertices
 
     def cached(self, key: str, build: Callable[[csr.Graph], Any]) -> Any:
         """Per-snapshot memo for derived state (backend arrays, tiles)."""
@@ -94,14 +122,24 @@ class SnapshotStore:
             self.publish(graph)
 
     # -- writer side --------------------------------------------------------
-    def publish(self, graph: csr.Graph) -> Snapshot:
+    def publish(self, graph, *, num_vertices: Optional[int] = None,
+                cache: Optional[Dict[str, Any]] = None) -> Snapshot:
         """Install ``graph`` as the new current version.  The previous
         version keeps serving its pinned readers and is reclaimed when the
-        last of them releases (immediately, if it had none)."""
+        last of them releases (immediately, if it had none).
+
+        ``graph`` may be a zero-argument thunk: the O(delta) publish path.
+        Pre-seed ``cache`` with the backend readers will use (keyed like
+        ``Snapshot.cached``) and pass ``num_vertices`` so nothing on the
+        query path forces a materialization; ``publish_seconds`` then
+        records the delta-sized cost instead of an O(E) rebuild."""
         t0 = time.perf_counter()
         with obs_trace.span("serve.publish", cat="serve",
-                            version=self._next_version):
-            snap = Snapshot(version=self._next_version, graph=graph)
+                            version=self._next_version,
+                            lazy=callable(graph)):
+            snap = Snapshot(version=self._next_version, _graph=graph,
+                            _num_vertices=num_vertices,
+                            _cache=dict(cache) if cache else {})
             self._next_version += 1
             prev, self._current = self._current, snap
             self._versions[snap.version] = snap

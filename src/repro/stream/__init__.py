@@ -13,14 +13,18 @@ service around that observation:
 * ``incremental`` — delta-based PageRank (exact residual carry + forward
   push) and SSSP (insertion relaxation, deletion fallback) refresh;
 * ``service``     — the ingest-and-query loop with regroup/compact policies
-  and the cachesim locality-decay hook.
+  and the cachesim locality-decay hook;
+* ``sharded``     — ``ShardedStreamService``: the same loop mirrored into a
+  multi-device layout with O(delta) per-batch routing (``repro.dist.stream``)
+  and sharded queries.
 """
-from . import delta, incremental, regroup, service  # noqa: F401
+from . import delta, incremental, regroup, service, sharded  # noqa: F401
 from .delta import ApplyResult, DeltaGraph  # noqa: F401
 from .incremental import (  # noqa: F401
     IncrementalPageRank,
     IncrementalSSSP,
     StreamArrays,
+    StreamBackend,
     edge_map_pull_stream,
     edge_map_push_stream,
     edge_map_push_stream_fused,
@@ -28,6 +32,7 @@ from .incremental import (  # noqa: F401
     stream_push_tiles,
 )
 from .regroup import IncrementalDBG, RemapDelta  # noqa: F401
+from .sharded import ShardedStreamService  # noqa: F401
 from .service import (  # noqa: F401
     IngestStats,
     StreamConfig,

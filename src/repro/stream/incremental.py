@@ -43,6 +43,7 @@ from .delta import ApplyResult, DeltaGraph, occurrence_rank
 
 __all__ = [
     "StreamArrays",
+    "StreamBackend",
     "stream_arrays",
     "edge_map_pull_stream",
     "edge_map_push_stream",
@@ -233,6 +234,113 @@ def edge_map_push_stream(
 
     acc = scatter(init, sa.out_src, sa.out_dst, sa.out_w, sa.out_alive)
     return scatter(acc, sa.ex_src, sa.ex_dst, sa.ex_w, sa.ex_alive)
+
+
+# ---------------------------------------------------------------------------
+# Engine-protocol backend over the live base + delta layout
+# ---------------------------------------------------------------------------
+
+class StreamBackend:
+    """``engine.EdgeMapBackend`` over :class:`StreamArrays`.
+
+    Construction via :func:`from_delta` costs O(delta): ``stream_arrays``
+    reuses the base-direction uploads cached on the ``DeltaGraph`` (and the
+    O(E) alive masks, unless a base tombstone landed) and only re-pads the
+    pending extras.  This is what lets ``serve.SnapshotStore`` publish a
+    version without rebuilding backend arrays from scratch.
+
+    Batched (V, K) query planes vmap the 1-D stream edge maps over the plane
+    axis; registered as a pytree so the jitted batched solvers take it as an
+    argument like any other backend.
+    """
+
+    def __init__(self, sa: StreamArrays, weighted: bool = False):
+        self.sa = sa
+        self.weighted = bool(weighted)
+
+    @classmethod
+    def from_delta(cls, dg: DeltaGraph) -> "StreamBackend":
+        return cls(stream_arrays(dg), dg.base.out_csr.weights is not None)
+
+    # -- delegate surface ---------------------------------------------------
+    @property
+    def num_vertices(self) -> int:
+        return self.sa.num_vertices
+
+    @property
+    def in_deg(self) -> jnp.ndarray:
+        return self.sa.in_deg
+
+    @property
+    def out_deg(self) -> jnp.ndarray:
+        return self.sa.out_deg
+
+    # -- edge maps ----------------------------------------------------------
+    def pull(self, prop, *, src_frontier=None, **kw):
+        if prop.ndim == 1:
+            return edge_map_pull_stream(self.sa, prop,
+                                        src_frontier=src_frontier, **kw)
+        if src_frontier is None:
+            return jax.vmap(
+                lambda p: edge_map_pull_stream(self.sa, p, **kw),
+                in_axes=1, out_axes=1)(prop)
+        return jax.vmap(
+            lambda p, f: edge_map_pull_stream(self.sa, p, src_frontier=f,
+                                              **kw),
+            in_axes=(1, 1), out_axes=1)(prop, src_frontier)
+
+    def push(self, prop, *, src_frontier=None, init=None, reduce="sum",
+             **kw):
+        if prop.ndim == 1:
+            return edge_map_push_stream(self.sa, prop, reduce=reduce,
+                                        src_frontier=src_frontier,
+                                        init=init, **kw)
+        v = self.sa.num_vertices
+        if src_frontier is None:
+            src_frontier = jnp.ones((v, prop.shape[1]), bool)
+        if init is None:
+            init = jnp.full((v, prop.shape[1]), reduce_identity(reduce),
+                            prop.dtype)
+        return jax.vmap(
+            lambda p, f, i: edge_map_push_stream(
+                self.sa, p, reduce=reduce, src_frontier=f, init=i, **kw),
+            in_axes=(1, 1, 1), out_axes=1)(prop, src_frontier, init)
+
+    def out_edge_sum(self, edge_val) -> jnp.ndarray:
+        v = self.sa.num_vertices
+        vals = jnp.where(self.sa.out_alive,
+                         edge_val(self.sa.out_src, self.sa.out_dst), 0)
+        out = jax.ops.segment_sum(vals, self.sa.out_src, num_segments=v,
+                                  indices_are_sorted=True)
+        evals = jnp.where(self.sa.ex_alive,
+                          edge_val(self.sa.ex_src, self.sa.ex_dst), 0)
+        return out.at[self.sa.ex_src].add(evals)
+
+    # -- the lazy-snapshot escape hatch -------------------------------------
+    def materialize(self):
+        """The exact version-N graph these arrays pin (alive base edges +
+        alive extras) as an immutable ``csr.Graph`` — O(E), taken only when
+        a reader forces ``Snapshot.graph`` on a lazily published version."""
+        from ..graph import csr
+        keep = np.asarray(self.sa.in_alive)
+        src = [np.asarray(self.sa.in_src)[keep]]
+        dst = [np.asarray(self.sa.in_dst)[keep]]
+        ekeep = np.asarray(self.sa.ex_alive)
+        src.append(np.asarray(self.sa.ex_src)[ekeep])
+        dst.append(np.asarray(self.sa.ex_dst)[ekeep])
+        w = None
+        if self.weighted:
+            w = np.concatenate([np.asarray(self.sa.in_w)[keep],
+                                np.asarray(self.sa.ex_w)[ekeep]])
+        return csr.from_edges(np.concatenate(src), np.concatenate(dst),
+                              self.num_vertices, weights=w)
+
+
+jax.tree_util.register_pytree_node(
+    StreamBackend,
+    lambda b: ((b.sa,), b.weighted),
+    lambda aux, ch: StreamBackend(ch[0], aux),
+)
 
 
 # ---------------------------------------------------------------------------

@@ -222,6 +222,7 @@ class StreamService:
             self.pr.ingest(result)
             for issp in self._sssp.values():
                 issp.ingest(result)
+        self._on_apply(result)
         self.batches_applied += 1
 
         regroup_s, moved = 0.0, 0
@@ -266,6 +267,11 @@ class StreamService:
                                   "inserted": stats.inserted,
                                   "deleted": stats.deleted})
         return stats
+
+    def _on_apply(self, result: ApplyResult) -> None:
+        """Hook for subclasses that mirror each batch into another layout
+        (``ShardedStreamService`` stashes the ApplyResult here); runs after
+        the incremental consumers refreshed, before regroup/compaction."""
 
     # -- queries --------------------------------------------------------------
     def pagerank(self) -> np.ndarray:
